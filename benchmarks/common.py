@@ -1,0 +1,29 @@
+"""Shared benchmark scaffolding: result recording + CPU-scaled problem sizes.
+
+Scaling note: the paper measures 1000 runs x 20 problems per cell on silicon
+(3 us per anneal). This container is one CPU core, so default sizes are
+scaled down (--full restores the paper protocol); success-rate ESTIMATES are
+unbiased either way, only their error bars widen.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def record(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    payload = dict(payload)
+    payload["wall_time"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

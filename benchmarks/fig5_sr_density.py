@@ -1,0 +1,64 @@
+"""Fig. 5 (top): 99% success rates across problem sizes (16..64) and
+densities (10%..90%) under landscape perturbation.
+
+Trends checked against the paper: SR decreases with problem size and
+increases with density.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import IsingMachine
+from repro.problems import paper_benchmark_suite
+from repro.solvers import best_known, brute_force_ground_state
+
+from .common import record, csv_line
+
+
+def run(full: bool = False):
+    t0 = time.time()
+    sizes = (16, 32, 48, 64)
+    densities = (0.1, 0.3, 0.5, 0.7, 0.9)
+    per_cell = 20 if full else 4
+    n_runs = 1000 if full else 200
+    suite = paper_benchmark_suite(sizes, densities, per_cell, seed=2026)
+    m = IsingMachine()
+
+    grid = {}
+    for (n, d), ps in suite.items():
+        if n <= 20:
+            bk = np.array([brute_force_ground_state(J)[0] for J in ps.J])
+        else:
+            bk = best_known(ps.J, seed=5)
+        sr = m.solve(ps.J, num_runs=n_runs, seed=17).success_rate(bk)
+        grid[f"{n}_{int(d*100)}"] = float(sr.mean())
+
+    # trends
+    mean_by_size = {n: np.mean([grid[f"{n}_{int(d*100)}"] for d in densities])
+                    for n in sizes}
+    mean_by_density = {d: np.mean([grid[f"{n}_{int(d*100)}"] for n in sizes])
+                       for d in densities}
+    size_trend_down = all(
+        mean_by_size[sizes[i]] >= mean_by_size[sizes[i + 1]] - 0.02
+        for i in range(len(sizes) - 1))
+    dens = [mean_by_density[d] for d in densities]
+    density_trend_up = dens[-1] > dens[0]
+
+    payload = {"grid": grid, "per_cell": per_cell, "runs": n_runs,
+               "mean_by_size": {str(k): float(v) for k, v in mean_by_size.items()},
+               "mean_by_density": {str(k): float(v) for k, v in mean_by_density.items()},
+               "size_trend_decreasing": bool(size_trend_down),
+               "density_trend_increasing": bool(density_trend_up)}
+    record("fig5_sr_density", payload)
+    us = (time.time() - t0) * 1e6 / (len(suite) * per_cell * n_runs)
+    print(csv_line(
+        "fig5_sr_density", us,
+        f"SR16={mean_by_size[16]:.3f};SR64={mean_by_size[64]:.3f};"
+        f"size_trend_down={size_trend_down};density_trend_up={density_trend_up}"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Anneal-throughput microbench: fused Pallas path (interpret on CPU;
+compiled on TPU) vs the pure-jnp scan reference — anneals/second and
+simulated-chip equivalents (one chip = 1/(3us) = 333k anneals/s/die).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeviceModel, DEFAULT_PERTURBATION, schedule_table
+from repro.core.annealer import anneal
+from repro.core.lfsr import lfsr_voltage_inits
+from repro.kernels import ops
+from repro.problems import problem_set
+
+from .common import record, csv_line
+
+
+def run(full: bool = False):
+    n, P, R = 64, 2, 128
+    dev = DeviceModel(n_spins=n, anneal_sweeps=1.0)   # short anneal for bench
+    ps = problem_set(n, 0.5, P, seed=5)
+    J = np.asarray(dev.quantize(ps.J))
+    v0 = np.stack([lfsr_voltage_inits(n, R, seed=i) for i in range(P)])
+
+    # jnp path
+    r = anneal(jnp.asarray(J), jnp.asarray(v0), dev, DEFAULT_PERTURBATION)
+    jax.block_until_ready(r.v_final)
+    t0 = time.time()
+    iters = 3
+    for _ in range(iters):
+        r = anneal(jnp.asarray(J), jnp.asarray(v0), dev, DEFAULT_PERTURBATION)
+        jax.block_until_ready(r.v_final)
+    t_jnp = (time.time() - t0) / iters
+
+    # pallas interpret path (correctness-mode on CPU; compiled on TPU)
+    v, sig, e = ops.fused_anneal(J, v0, dev, DEFAULT_PERTURBATION)
+    jax.block_until_ready(v)
+    t0 = time.time()
+    v, sig, e = ops.fused_anneal(J, v0, dev, DEFAULT_PERTURBATION)
+    jax.block_until_ready(v)
+    t_pallas = time.time() - t0
+
+    anneals = P * R
+    payload = {
+        "anneals": anneals, "steps": dev.n_steps,
+        "jnp_s": t_jnp, "pallas_interpret_s": t_pallas,
+        "jnp_anneals_per_s": anneals / t_jnp,
+        "note": "pallas timing is interpret=True (Python) on CPU — "
+                "correctness mode, not a speed claim; TPU projections in "
+                "EXPERIMENTS.md use the dry-run roofline instead",
+    }
+    record("kernel_throughput", payload)
+    print(csv_line("kernel_throughput", t_jnp * 1e6 / anneals,
+                   f"jnp={anneals/t_jnp:.0f}anneals/s;"
+                   f"chip_equiv={anneals/t_jnp/333333:.4f}dies"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

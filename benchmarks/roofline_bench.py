@@ -1,0 +1,73 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+experiments/roofline_table.md plus a CSV summary line.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import record, csv_line
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline_table.md")
+
+
+def load_cells():
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    mem = c.get("memory", {})
+    resident = (mem.get("argument_size_in_bytes", 0) +
+                mem.get("temp_size_in_bytes", 0)) / 2**30
+    return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} | "
+            f"{r['t_collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0):.3f} | {resident:.1f} |")
+
+
+def run(full: bool = False):
+    cells = load_cells()
+    lines = [
+        "# Roofline table (from multi-pod dry-run artifacts)",
+        "",
+        "t_* in ms per step/token; useful = MODEL_FLOPS/HLO_FLOPs; frac = ",
+        "roofline fraction of the dominant bound; resident = per-device ",
+        "args+temp GiB (16 GiB HBM).",
+        "",
+        "| arch | shape | mesh | t_comp | t_mem | t_coll | bound | useful "
+        "| frac | GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    single = [c for c in cells if c["mesh"] == "16x16"]
+    multi = [c for c in cells if c["mesh"] != "16x16"]
+    for c in single + multi:
+        lines.append(fmt_row(c))
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    n_mem = sum(1 for c in cells if c["roofline"]["dominant"] == "memory")
+    n_comp = sum(1 for c in cells if c["roofline"]["dominant"] == "compute")
+    n_coll = sum(1 for c in cells if c["roofline"]["dominant"] == "collective")
+    record("roofline_summary", {"cells": len(cells), "memory_bound": n_mem,
+                                "compute_bound": n_comp,
+                                "collective_bound": n_coll})
+    print(csv_line("roofline_bench", 0.0,
+                   f"cells={len(cells)};mem_bound={n_mem};"
+                   f"compute_bound={n_comp};coll_bound={n_coll}"))
+    return {"cells": len(cells)}
+
+
+if __name__ == "__main__":
+    run()

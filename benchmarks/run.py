@@ -1,0 +1,50 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4_success]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark; JSON artifacts land
+in experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (fig4_success, fig4_trajectories, fig5_sr_density, fig5_tts,
+               kernel_throughput, roofline_bench, table2_ets)
+
+ALL = {
+    "fig4_trajectories": fig4_trajectories.run,
+    "fig4_success": fig4_success.run,
+    "fig5_sr_density": fig5_sr_density.run,
+    "fig5_tts": fig5_tts.run,
+    "table2_ets": table2_ets.run,
+    "kernel_throughput": kernel_throughput.run,
+    "roofline_bench": roofline_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale problem counts (hours on CPU)")
+    ap.add_argument("--only", nargs="*", choices=list(ALL))
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            ALL[name](full=args.full)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, e))
+    if failures:
+        print(f"{len(failures)} benchmark(s) FAILED: "
+              f"{[n for n, _ in failures]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

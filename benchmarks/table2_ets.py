@@ -1,0 +1,72 @@
+"""Table II: TTS / ETS / normalized-ETS arithmetic with the paper's hardware
+constants (31.6 mW, tau = 3 us, 31 levels, 64 spins, 63 interactions).
+
+Two things are validated:
+  1. the metric pipeline reproduces the paper's own arithmetic —
+     ETS = P * TTS and normalized ETS = ETS / (log2(31) * 64*63/2),
+     i.e. 22.76 uJ -> 2.28 nJ/edge-bit;
+  2. our simulated median TTS lands in the paper's order of magnitude.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import IsingMachine
+from repro.metrics import (energy_to_solution, normalized_ets,
+                           paper_hw_constants, time_to_solution,
+                           tts_distribution)
+from repro.problems import problem_set
+from repro.solvers import best_known
+
+from .common import record, csv_line
+
+
+def run(full: bool = False):
+    t0 = time.time()
+    hw = paper_hw_constants()
+
+    # 1) paper arithmetic check
+    paper_tts_s = 0.72e-3
+    paper_ets = energy_to_solution(hw.power_w, paper_tts_s)          # J
+    paper_norm = normalized_ets(paper_ets, hw.coeff_levels, hw.n_spins,
+                                hw.interactions)
+    arithmetic_ok = (abs(paper_ets * 1e6 - 22.752) < 0.1 and
+                     abs(paper_norm * 1e9 - 2.28) < 0.03)
+
+    # 2) simulated TTS -> ETS
+    n_problems = 50 if full else 10
+    n_runs = 1000 if full else 250
+    ps = problem_set(64, 0.5, n_problems, seed=999)
+    bk = best_known(ps.J, seed=13)
+    m = IsingMachine()
+    sr = m.solve(ps.J, num_runs=n_runs, seed=29).success_rate(bk)
+    dist = tts_distribution(sr, hw.anneal_s)
+    sim_ets = energy_to_solution(hw.power_w, dist["median"])
+    sim_norm = normalized_ets(sim_ets, hw.coeff_levels, hw.n_spins,
+                              hw.interactions)
+
+    payload = {
+        "paper": {"tts_ms": 0.72, "ets_uJ": float(paper_ets * 1e6),
+                  "normalized_ets_nJ": float(paper_norm * 1e9),
+                  "reported_ets_uJ": 22.76, "reported_norm_nJ": 2.28,
+                  "arithmetic_ok": bool(arithmetic_ok)},
+        "simulated": {"median_tts_ms": dist["median"] * 1e3,
+                      "ets_uJ": float(sim_ets * 1e6),
+                      "normalized_ets_nJ": float(sim_norm * 1e9),
+                      "n_problems": n_problems, "n_runs": n_runs},
+    }
+    record("table2_ets", payload)
+    us = (time.time() - t0) * 1e6 / (n_problems * n_runs)
+    print(csv_line(
+        "table2_ets", us,
+        f"arith={'OK' if arithmetic_ok else 'BAD'};"
+        f"paper_norm={paper_norm*1e9:.2f}nJ;"
+        f"sim_median_tts={dist['median']*1e3:.2f}ms;"
+        f"sim_norm={sim_norm*1e9:.2f}nJ"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Serve a small model with batched requests: prefill + token-by-token
+decode through the KV-cache path (the serve_step the dry-run lowers at
+32k/512k scale).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # state decode
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    out = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                reduced=True)
+    print(f"[{args.arch}] prefill {out['prefill_s']:.2f}s | "
+          f"decode {out['decode_s']:.2f}s ({out['tok_per_s']:.1f} tok/s)")
+    print("sample generation:", out["generated"][0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

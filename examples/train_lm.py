@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing + fault
+tolerance. (Reduced further via --small for CI-speed runs.)
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --small --steps 40
+"""
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="tiny config (seconds instead of minutes)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.small:
+        losses = train("qwen3-0.6b", steps=args.steps, batch=8, seq=128,
+                       ckpt_dir=args.ckpt_dir, reduced=True)
+    else:
+        # ~100M-class: full qwen3-0.6b backbone with a trimmed vocab, which
+        # keeps the CPU example tractable; on a real pod drop `reduced` and
+        # run the full config through launch/train.py instead.
+        import jax
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch import train as t
+        cfg = dataclasses.replace(get_config("qwen3-0.6b"),
+                                  vocab_size=8192, dtype="float32",
+                                  n_layers=12)
+        orig = t.get_config
+        t.get_config = lambda a: cfg          # inject the 100M config
+        try:
+            losses = train("qwen3-0.6b", steps=args.steps, batch=8, seq=512,
+                           ckpt_dir=args.ckpt_dir, reduced=False)
+        finally:
+            t.get_config = orig
+    print(f"loss: first={losses[0]:.3f} last={losses[-1]:.3f} "
+          f"({len(losses)} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Emit experiments/perf_delta.md: per-cell baseline vs optimized bound."""
+import glob, json, os
+
+BASE = "experiments/dryrun_baseline"
+OPT = "experiments/dryrun"
+
+rows = []
+for fb in sorted(glob.glob(os.path.join(BASE, "*.json"))):
+    name = os.path.basename(fb)
+    fo = os.path.join(OPT, name)
+    if not os.path.exists(fo):
+        continue
+    b = json.load(open(fb))
+    o = json.load(open(fo))
+    rb, ro = b["roofline"], o["roofline"]
+    rows.append((b["arch"], b["shape"], b["mesh"],
+                 rb["bound_step_s"], ro["bound_step_s"],
+                 rb.get("roofline_fraction", 0), ro.get("roofline_fraction", 0)))
+
+lines = ["# Baseline vs optimized (bound seconds per step; §Perf)",
+         "",
+         "| arch | shape | mesh | bound before | bound after | speedup | frac before | frac after |",
+         "|---|---|---|---|---|---|---|---|"]
+tot_b = tot_o = 0.0
+for a, s, m, bb, bo, fb_, fo_ in rows:
+    sp = bb / bo if bo > 0 else float("inf")
+    tot_b += bb; tot_o += bo
+    lines.append(f"| {a} | {s} | {m} | {bb:.3f} | {bo:.3f} | {sp:.2f}x | "
+                 f"{fb_:.3f} | {fo_:.3f} |")
+lines.append("")
+lines.append(f"Aggregate bound over all cells: {tot_b:.1f}s -> {tot_o:.1f}s "
+             f"({tot_b/max(tot_o,1e-9):.2f}x)")
+open("experiments/perf_delta.md", "w").write("\n".join(lines) + "\n")
+print("\n".join(lines[-3:]))

@@ -1,0 +1,127 @@
+"""Shard-agnostic, atomic checkpointing (fault-tolerance substrate).
+
+Format: one .npz per save containing flattened path->array entries plus a
+JSON manifest (step, data-iterator state, PRNG key, mesh shape at save time).
+Save is write-to-tmp + atomic rename, so a crash mid-save never corrupts the
+latest checkpoint; ``latest_step`` scans for the newest COMPLETE manifest.
+
+Restore is mesh-agnostic: arrays are loaded as host numpy and re-placed with
+``jax.device_put`` against the CURRENT mesh's shardings — this is what makes
+elastic rescale (restore a 512-chip checkpoint onto 256 chips) work: the
+save format carries no device topology.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                        suffix=".tmp.npz")
+    os.close(tmp_fd)
+    try:
+        np.savez(tmp_name, **flat)
+        # np.savez may append .npz
+        actual = tmp_name if os.path.exists(tmp_name) else tmp_name + ".npz"
+        os.replace(actual, path)
+        if metadata is not None:
+            mtmp = path + ".meta.tmp"
+            with open(mtmp, "w") as f:
+                json.dump(metadata, f)
+            os.replace(mtmp, path + ".meta.json")
+    finally:
+        for f in (tmp_name, tmp_name + ".npz"):
+            if os.path.exists(f):
+                os.remove(f)
+
+
+def load_pytree(path: str, template, shardings=None):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree
+
+
+class Checkpointer:
+    """step-numbered checkpoints with retention and crash-safe latest."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None):
+        meta = dict(metadata or {})
+        meta["step"] = int(step)
+        save_pytree(self._path(step), tree, meta)
+        self._gc()
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                s = int(f[5:13])
+                if os.path.exists(self._path(s) + ".meta.json"):
+                    steps.append(s)
+        return max(steps) if steps else None
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        tree = load_pytree(self._path(step), template, shardings)
+        with open(self._path(step) + ".meta.json") as f:
+            meta = json.load(f)
+        return tree, meta
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(f[5:13]) for f in os.listdir(self.dir)
+            if f.startswith("ckpt_") and f.endswith(".npz")))
+        for s in steps[:-self.keep]:
+            for suffix in ("", ".meta.json"):
+                p = self._path(s) + suffix
+                if os.path.exists(p):
+                    os.remove(p)

@@ -1,0 +1,108 @@
+"""Digital twin of the chip's analog non-idealities (paper §II.D, §III).
+
+Everything the 65nm circuit does to the mathematical Ising model is captured
+here: 4-bit+sign DAC quantization (31 levels), CU gate leakage, the inverter
+ADC threshold, drive strength (a/C of Eq. 4), and optional Gaussian "inherent
+perturbation" noise used for the measured-baseline comparison of Fig. 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Hardware constants of the simulated chip (dimensionless units).
+
+    Time unit = one full column-refresh sweep (64 column slots; 0.8 us at the
+    chip's 80 MHz column clock). The paper's 3 us anneal is 3.75 sweeps.
+    """
+
+    n_spins: int = 64
+    vdd: float = 1.0
+    coeff_bits: int = 4                 # magnitude bits -> 31 levels with sign
+    cols_per_tile: int = 64             # refresh pointer width (one die = 64)
+    substeps: int = 8                   # Euler substeps per column slot
+    anneal_sweeps: float = 3.75         # 3 us / 0.8 us
+    drive: Optional[float] = None       # a/C in V/(unit level * sweep); None -> 1.0
+    tau_leak_sweeps: float = 10.0       # gate-leak time constant, in sweeps
+    noise_sigma: float = 0.0            # per-step dv noise (inherent perturbation)
+    init_swing: float = 0.5             # |v0 - vdd/2| = init_swing * vdd/2
+    compute_dtype: str = "float32"      # matvec dtype; 'bfloat16' halves HBM
+                                        # traffic (J levels are exact in bf16;
+                                        # the chip's own 4-bit DAC is coarser
+                                        # than bf16 scale error). Accumulation
+                                        # stays f32.
+
+    @property
+    def max_level(self) -> int:
+        return (1 << self.coeff_bits) - 1  # 15
+
+    @property
+    def n_levels(self) -> int:
+        return 2 * self.max_level + 1  # 31
+
+    @property
+    def threshold(self) -> float:
+        return 0.5 * self.vdd
+
+    @property
+    def slots_per_sweep(self) -> int:
+        return self.cols_per_tile
+
+    @property
+    def n_steps(self) -> int:
+        """Total Euler steps in one anneal."""
+        return int(round(self.anneal_sweeps * self.slots_per_sweep * self.substeps))
+
+    @property
+    def dt(self) -> float:
+        """Euler step in sweep units."""
+        return 1.0 / (self.slots_per_sweep * self.substeps)
+
+    @property
+    def drive_eff(self) -> float:
+        """a/C (Eq. 4) in volts per (unit coupling level x sweep).
+
+        Calibration target: the WEAKEST quantized coupling (level 1) must be
+        able to slew a node from rail to threshold within ~0.5 sweep,
+        otherwise weak-field spins never relax inside the 3.75-sweep anneal
+        (the chip converges within its anneal window; our first calibration
+        pass showed <6% of runs even reached 1-flip-stable states when drive
+        was sized to the *strongest* field instead). Default 1.0 V/(level*
+        sweep). Per-step dv for a typical strong field (~70 levels) is then
+        70/512 ~ 0.14 V at substeps=8 — small enough to avoid synchronous-
+        flip chatter."""
+        if self.drive is not None:
+            return self.drive
+        return float(self.vdd)
+
+    # -- DAC / ADC -----------------------------------------------------------
+    def quantize(self, J):
+        """4-bit + sign current-steering DAC: integer levels in [-15, 15]."""
+        J = jnp.asarray(J)
+        scale = jnp.max(jnp.abs(J), axis=(-1, -2), keepdims=True)
+        scale = jnp.where(scale == 0, 1.0, scale)
+        lev = jnp.round(J / scale * self.max_level)
+        return jnp.clip(lev, -self.max_level, self.max_level)
+
+    def adc(self, v):
+        """1-bit inverter ADC, Eq. (5): +-1 at vdd/2 (>= maps to +1)."""
+        return jnp.where(v >= self.threshold, 1.0, -1.0).astype(jnp.float32)
+
+
+DEFAULT_DEVICE = DeviceModel()
+
+
+def chip_power_watts() -> float:
+    """Measured total on-chip power (Table II): 31.6 mW @ 1.2 V."""
+    return 31.6e-3
+
+
+def anneal_time_seconds(dev: DeviceModel = DEFAULT_DEVICE) -> float:
+    """Physical per-run anneal time tau: sweeps * 64 slots * 12.5 ns."""
+    return dev.anneal_sweeps * dev.slots_per_sweep * 12.5e-9

@@ -1,0 +1,121 @@
+"""IsingMachine — the public solve() API of the digital twin.
+
+Usage:
+    m = IsingMachine()                          # paper chip: 64 spins
+    out = m.solve(J, num_runs=1000, seed=7)     # J: (N,N) or (P,N,N)
+    out.best_energy, out.success_rate(best_known)
+
+Backends:
+    'jnp'    — lax.scan reference (runs anywhere; the dry-run path)
+    'pallas' — fused VMEM anneal kernel (TPU target; interpret=True on CPU)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .annealer import anneal, AnnealResult
+from .device_model import DeviceModel
+from .hamiltonian import ising_energy
+from .lfsr import lfsr_voltage_inits
+from .perturbation import PerturbationConfig, DEFAULT_PERTURBATION, NOMINAL
+
+
+@dataclasses.dataclass
+class SolveOutput:
+    sigma: np.ndarray           # (P, R, N)
+    energy: np.ndarray          # (P, R)
+    v_final: np.ndarray         # (P, R, N)
+    energy_traj: Optional[np.ndarray] = None
+
+    @property
+    def best_energy(self) -> np.ndarray:          # (P,)
+        return self.energy.min(axis=-1)
+
+    @property
+    def best_sigma(self) -> np.ndarray:           # (P, N)
+        idx = self.energy.argmin(axis=-1)
+        return np.take_along_axis(self.sigma, idx[:, None, None], axis=1)[:, 0]
+
+    def success_rate(self, best_known, frac: float = 0.99) -> np.ndarray:
+        """Fraction of runs reaching >= frac of best-known energy (paper's
+        99%-of-best rule; energies are negative, so success is
+        E <= best + (1-frac)*|best|)."""
+        best_known = np.asarray(best_known, dtype=np.float64).reshape(-1, 1)
+        thresh = best_known + (1.0 - frac) * np.abs(best_known)
+        return (self.energy <= thresh + 1e-9).mean(axis=-1)
+
+
+class IsingMachine:
+    def __init__(self,
+                 device: DeviceModel | None = None,
+                 perturbation: PerturbationConfig | None = None,
+                 backend: str = "jnp"):
+        self.device = device or DeviceModel()
+        self.perturbation = perturbation if perturbation is not None else DEFAULT_PERTURBATION
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+
+    # ------------------------------------------------------------------
+    def solve(self, J, num_runs: int = 100, seed: int = 0,
+              record_every: int = 0, key: Optional[jax.Array] = None,
+              quantize: bool = True) -> SolveOutput:
+        """Anneal ``num_runs`` LFSR-seeded runs per problem.
+
+        J: (N, N) or (P, N, N) float couplings (symmetric, zero diag).
+        quantize: apply the 31-level DAC model (identity for integer J in
+            [-15, 15], which is the paper's problem distribution).
+        """
+        J = np.asarray(J, dtype=np.float32)
+        single = J.ndim == 2
+        if single:
+            J = J[None]
+        P, N, _ = J.shape
+        dev = self.device
+        if N != dev.n_spins:
+            dev = dataclasses.replace(dev, n_spins=N)
+
+        Jq = dev.quantize(J) if quantize else jnp.asarray(J)
+        v0 = np.stack([
+            lfsr_voltage_inits(N, num_runs, seed=seed + 7919 * p,
+                               vdd=dev.vdd, swing=dev.init_swing)
+            for p in range(P)
+        ])  # (P, R, N)
+
+        if self.backend == "pallas":
+            from ..kernels import ops as kops
+            v, sigma, energy = kops.fused_anneal(Jq, jnp.asarray(v0), dev,
+                                                 self.perturbation)
+            traj = None
+            if record_every:
+                res = anneal(Jq, v0, dev, self.perturbation, key=key,
+                             record_every=record_every)
+                traj = res.energy_traj
+        else:
+            res = anneal(Jq, v0, dev, self.perturbation, key=key,
+                         record_every=record_every)
+            v, sigma, energy, traj = res.v_final, res.sigma, res.energy, res.energy_traj
+
+        return SolveOutput(
+            sigma=np.asarray(sigma), energy=np.asarray(energy),
+            v_final=np.asarray(v),
+            energy_traj=None if traj is None else np.asarray(traj))
+
+    # ------------------------------------------------------------------
+    def gradient_descent_baseline(self) -> "IsingMachine":
+        """The paper's no-perturbation baseline: same chip, rails always on,
+        leakage disabled (ideal refresh), no noise."""
+        dev = dataclasses.replace(self.device, tau_leak_sweeps=float("inf"),
+                                  noise_sigma=0.0)
+        return IsingMachine(device=dev, perturbation=NOMINAL, backend=self.backend)
+
+    def inherent_noise_baseline(self, sigma: float = 2.0) -> "IsingMachine":
+        """Measured-chip baseline of Fig. 4: no deterministic perturbation,
+        only circuit noise."""
+        dev = dataclasses.replace(self.device, noise_sigma=sigma)
+        return IsingMachine(device=dev, perturbation=NOMINAL, backend=self.backend)

@@ -1,0 +1,107 @@
+"""Continuous programming + landscape perturbation schedule (paper §III).
+
+The chip refreshes coupling columns round-robin (one column per 12.5 ns slot).
+In nominal mode the DAC rails are always on, so the selected column is simply
+re-programmed (mitigating gate leakage). In perturbation mode the DAC rails
+are gated off for ``off_slots`` out of every ``period_slots`` column slots;
+a column selected while the rails are off is written to ZERO and stays zero
+until its next selection with rails on.
+
+The whole schedule is DETERMINISTIC and closed-form in the step index, so it
+can be evaluated statelessly inside ``lax.scan`` bodies and Pallas kernels:
+
+    column j's most recent selection slot  m_j(t) = slot - ((slot - j) mod C)
+    zeroed_j(t)  = rails_off(m_j)                      (anneal-phase selections)
+    scale_j(t)   = 0 if zeroed else exp(-age_j / (C * tau_leak))
+
+Pre-anneal programming (the initial full load) is modeled as selection slots
+m_j = j - C with rails on, so at t=0 every column is programmed and column 0
+is the stalest — exactly the chip's load-then-anneal sequencing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from .device_model import DeviceModel
+
+
+@dataclasses.dataclass(frozen=True)
+class PerturbationConfig:
+    """Landscape-perturbation knobs (all deterministic).
+
+    period_slots: DAC gating period in column slots. Deliberately NOT a
+        multiple of 64 by default so the disable window rotates across
+        columns pass-to-pass (Fig. 1 bottom shows different columns hit on
+        successive passes). Calibration (scripts/calibrate_perturbation.py,
+        recorded in EXPERIMENTS.md) found frequent+mild windows best: period
+        48, off 8 (~17% duty, ~8 simultaneously-zeroed rotating columns).
+    off_slots: rails-off window length per period (0 disables perturbation).
+    settle_sweeps: perturbation is disabled for the LAST ``settle_sweeps``
+        of the anneal so the restored (exact) Hamiltonian drives final
+        convergence — "subsequent refresh restores the original Hamiltonian
+        for final convergence".
+    """
+
+    period_slots: int = 48
+    off_slots: int = 8
+    settle_sweeps: float = 1.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.off_slots > 0
+
+
+NOMINAL = PerturbationConfig(off_slots=0)
+DEFAULT_PERTURBATION = PerturbationConfig()
+
+
+def column_scales(step, dev: DeviceModel, pert: PerturbationConfig,
+                  n_cols: int | None = None, dtype=jnp.float32):
+    """Effective per-column coupling scale s_j at Euler step ``step``.
+
+    Returns (n_cols,) in [0, 1]. J_eff(t) = J * diag(s(t)) acting on the
+    source-spin axis; since J @ diag(s) @ q == J @ (s * q), callers apply it
+    as an elementwise scale on the quantized spin vector.
+
+    Works under jit/scan: ``step`` may be a traced int32 scalar.
+    """
+    C = dev.cols_per_tile
+    n = n_cols if n_cols is not None else dev.n_spins
+    step = jnp.asarray(step, dtype=jnp.int32)
+    slot = step // dev.substeps
+
+    j = jnp.arange(n, dtype=jnp.int32) % C          # column phase within tile
+    d = jnp.mod(slot - j, C)                        # slots since last selection
+    last_sel = slot - d                             # may be < 0 before 1st pass
+    # Pre-anneal load pass: column j programmed at virtual slot j - C.
+    pre = last_sel < 0
+    last_sel = jnp.where(pre, j - C, last_sel)
+
+    if pert.enabled:
+        settle_start = (dev.anneal_sweeps - pert.settle_sweeps) * C
+        rails_off = (jnp.mod(last_sel, pert.period_slots) < pert.off_slots)
+        rails_off = rails_off & (~pre) & (last_sel < settle_start)
+    else:
+        rails_off = jnp.zeros((n,), dtype=bool)
+
+    # Leakage decay by age (in slots) since last programming.
+    age_slots = (step.astype(dtype) / dev.substeps) - last_sel.astype(dtype)
+    if dev.tau_leak_sweeps > 0 and math.isfinite(dev.tau_leak_sweeps):
+        decay = jnp.exp(-age_slots / (C * dev.tau_leak_sweeps))
+    else:
+        decay = jnp.ones((n,), dtype=dtype)
+    return jnp.where(rails_off, jnp.zeros((), dtype=dtype), decay).astype(dtype)
+
+
+def schedule_table(dev: DeviceModel, pert: PerturbationConfig,
+                   n_cols: int | None = None, dtype=jnp.float32):
+    """Precompute s(t) for all steps -> (n_steps, n_cols). Small: the paper's
+    configuration is 960 x 64 floats. Used by the Pallas fast path so the
+    kernel streams one row per step instead of re-deriving the closed form."""
+    import jax
+    steps = jnp.arange(dev.n_steps, dtype=jnp.int32)
+    fn = lambda t: column_scales(t, dev, pert, n_cols=n_cols, dtype=dtype)
+    return jax.vmap(fn)(steps)

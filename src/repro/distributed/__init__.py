@@ -1,0 +1,8 @@
+from .sharding import (param_shardings, cache_shardings, batch_spec,
+                       batch_axes, data_size, tp_size)
+from .fault_tolerance import StragglerDetector, resilient_step, StepFailure
+from .elastic import remesh, largest_mesh_shape
+
+__all__ = ["param_shardings", "cache_shardings", "batch_spec", "batch_axes",
+           "data_size", "tp_size", "StragglerDetector", "resilient_step",
+           "StepFailure", "remesh", "largest_mesh_shape"]

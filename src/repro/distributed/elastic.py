@@ -1,0 +1,37 @@
+"""Elastic scaling: rebuild the mesh + reshard state when the healthy device
+count changes (node loss / capacity add).
+
+The checkpoint format is topology-free (host numpy + path keys), so elastic
+rescale is: detect change -> choose the largest supported mesh <= available
+devices -> re-place the restored pytree with the new shardings -> resume at
+the checkpointed step. Global batch stays fixed; per-device batch rescales
+(the data pipeline slices by (step, shard) so no data is skipped/repeated).
+"""
+from __future__ import annotations
+
+import logging
+from typing import Sequence
+
+import jax
+import numpy as np
+
+log = logging.getLogger("repro.elastic")
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int,
+                       pods: int = 1) -> tuple:
+    """Keep TP fixed (it's bound to weight shapes), shrink/grow data."""
+    per_pod = n_devices // pods
+    data = max(per_pod // model_parallel, 1)
+    shape = (pods, data, model_parallel) if pods > 1 else (data, model_parallel)
+    return shape
+
+
+def remesh(available_devices: Sequence, model_parallel: int, pods: int = 1):
+    n = len(available_devices)
+    shape = largest_mesh_shape(n, model_parallel, pods)
+    used = int(np.prod(shape))
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    devs = np.asarray(available_devices[:used]).reshape(shape)
+    log.info("elastic remesh: %d devices -> mesh %s (%d used)", n, shape, used)
+    return jax.sharding.Mesh(devs, axes)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spot (the fused anneal).
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU via interpret=True against the pure-jnp oracle in ref.py.
+"""
+from . import ops
+from .ising_anneal import fused_anneal_kernel
+from .ref import fused_anneal_ref
+
+__all__ = ["ops", "fused_anneal_kernel", "fused_anneal_ref"]

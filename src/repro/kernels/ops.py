@@ -1,0 +1,32 @@
+"""jit'd public wrappers around the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.device_model import DeviceModel
+from ..core.hamiltonian import ising_energy
+from ..core.perturbation import PerturbationConfig, schedule_table
+from .ising_anneal import fused_anneal_kernel
+
+
+def fused_anneal(J, v0, dev: DeviceModel, pert: PerturbationConfig,
+                 interpret: bool | None = None, block_r: int | None = None):
+    """Full anneal via the fused VMEM kernel.
+
+    Returns (v_final, sigma, energy) matching ``core.annealer.anneal``'s
+    noise-free outputs. interpret defaults to True off-TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = J.shape[-1]
+    scales = schedule_table(dev, pert, n_cols=n)
+    kw = {}
+    if block_r is not None:
+        kw["block_r"] = block_r
+    v = fused_anneal_kernel(jnp.asarray(J, jnp.float32), jnp.asarray(v0, jnp.float32),
+                            scales, drive_dt=dev.drive_eff * dev.dt,
+                            vdd=dev.vdd, interpret=interpret, **kw)
+    Jf = jnp.asarray(J, jnp.float32)
+    sigma = jnp.where(v >= 0.5 * dev.vdd, 1.0, -1.0)
+    return v, sigma, ising_energy(Jf, sigma)

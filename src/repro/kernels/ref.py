@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused anneal kernel.
+
+Semantically identical to ``core.annealer.anneal`` (noise-free path) but
+consumes a precomputed schedule table so the Pallas kernel and the oracle
+share bit-identical column scales.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_anneal_ref(J, v0, scales, drive_dt: float, vdd: float = 1.0):
+    """Integrate the chip dynamics for scales.shape[0] Euler steps.
+
+    J: (P, N, N) quantized couplings (float32)
+    v0: (P, R, N) initial capacitor voltages
+    scales: (T, N) per-step per-column coupling scales (leak + perturbation)
+    drive_dt: a/C * dt (volts per unit level per step)
+
+    Returns v_final (P, R, N).
+    """
+    J = jnp.asarray(J, jnp.float32)
+    v0 = jnp.asarray(v0, jnp.float32)
+    scales = jnp.asarray(scales, jnp.float32)
+    thr = 0.5 * vdd
+
+    def body(v, s):
+        q = jnp.where(v >= thr, 1.0, -1.0).astype(jnp.float32)
+        sq = q * s                                     # (P, R, N) * (N,)
+        dv = jnp.einsum("pij,prj->pri", J, sq) * drive_dt
+        return jnp.clip(v + dv, 0.0, vdd), None
+
+    v, _ = jax.lax.scan(body, v0, scales)
+    return v

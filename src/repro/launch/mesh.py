@@ -1,0 +1,23 @@
+"""Production mesh builders. FUNCTIONS, not module constants — importing this
+module never touches jax device state (required so smoke tests see 1 CPU
+device while the dry-run sees 512 forced host devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips, TPU v5e-256) or 2x16x16 two-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh():
+    """Whatever this host has (smoke tests / examples): (n, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,75 @@
+"""Ising-solve driver — the paper's workload as a production service.
+
+    PYTHONPATH=src python -m repro.launch.solve --spins 64 --density 0.5 \
+        --problems 4 --runs 256
+
+Shards problems x runs over the data axes of the active mesh and (for
+virtual chips > 64 spins) spin blocks over 'model'.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import DeviceModel, DEFAULT_PERTURBATION, IsingMachine
+from ..metrics import (energy_to_solution, normalized_ets, paper_hw_constants,
+                       time_to_solution)
+from ..problems import problem_set
+from ..solvers import best_known
+from .mesh import make_host_mesh
+
+
+def solve(n_spins: int, density: float, problems: int, runs: int,
+          seed: int = 0, backend: str = "jnp", perturbation: bool = True):
+    dev = DeviceModel(n_spins=n_spins)
+    machine = IsingMachine(device=dev, backend=backend)
+    if not perturbation:
+        machine = machine.gradient_descent_baseline()
+    ps = problem_set(n_spins, density, problems, seed=seed)
+    t0 = time.time()
+    out = machine.solve(ps.J, num_runs=runs, seed=seed + 1)
+    wall = time.time() - t0
+    bk = best_known(ps.J, seed=seed + 2)
+    sr = out.success_rate(bk)
+    hw = paper_hw_constants()
+    tts = time_to_solution(sr, hw.anneal_s)
+    ets = energy_to_solution(hw.power_w, tts)
+    return {
+        "best_energy": out.best_energy, "best_known": bk,
+        "success_rate": sr, "tts_s": tts, "ets_j": ets,
+        "normalized_ets_j": normalized_ets(ets, dev.n_levels, n_spins,
+                                           n_spins - 1),
+        "wall_s": wall,
+        "anneals_per_s": problems * runs / max(wall, 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spins", type=int, default=64)
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--problems", type=int, default=4)
+    ap.add_argument("--runs", type=int, default=256)
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--no-perturbation", action="store_true")
+    args = ap.parse_args()
+    out = solve(args.spins, args.density, args.problems, args.runs,
+                backend=args.backend, perturbation=not args.no_perturbation)
+    print("best energies:", out["best_energy"])
+    print("best known   :", out["best_known"])
+    print("success rates:", np.round(out["success_rate"], 4))
+    with np.printoptions(precision=3):
+        print("TTS (ms)     :", out["tts_s"] * 1e3)
+        print("ETS (uJ)     :", out["ets_j"] * 1e6)
+        print("norm ETS (nJ):", out["normalized_ets_j"] * 1e9)
+    print(f"throughput: {out['anneals_per_s']:.0f} anneals/s "
+          f"(wall {out['wall_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .zoo import Model, build, input_specs, cache_specs
+
+__all__ = ["Model", "build", "input_specs", "cache_specs"]

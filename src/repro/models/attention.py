@@ -1,0 +1,169 @@
+"""Attention: chunked flash-style self-attention (training/prefill) and
+KV-cache decode attention with a split-KV (flash-decoding) combine.
+
+Pure JAX (jnp + lax) so every path lowers on any backend — the Pallas budget
+in this repo is spent on the paper's own hot spot (the Ising anneal), and the
+32k-token prefills would OOM with naive (S x S) score materialization, so the
+online-softmax chunked form is the production path here.
+
+Shapes: q (B, S, H, D); k, v (B, S, Hkv, D) with H = Hkv * G (GQA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, n_heads: int):
+    """GQA KV expansion (B, S, Hkv, D) -> (B, S, H, D).
+
+    Head-axis replication BEFORE the score einsum keeps the head dimension a
+    plain shardable axis — GSPMD cannot split a (Hkv, G) factored head pair
+    across one mesh axis and falls back to fully replicating the score
+    tensor (measured 55x byte inflation on qwen3 train_4k; see EXPERIMENTS
+    §Perf). The repeat is a broadcast in HLO, not real traffic.
+    """
+    b, s, hkv, d = k.shape
+    g = n_heads // hkv
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+                    k_chunk: int = 512, scale: float | None = None):
+    """Online-softmax chunked attention. Never materializes (S, S) scores.
+
+    Memory high-water mark per layer: one (B, nq, q_chunk, H, k_chunk) score
+    block at a time. Causal masking is positional; off-diagonal fully-masked
+    chunks are still computed (documented compute overhead — EXPERIMENTS.md
+    §Perf iterates on it).
+    """
+    from .common import shard
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    out_dtype = q.dtype
+
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+
+    # keep the unrolled causal q loop short: at most 16 q chunks
+    q_chunk = min(max(q_chunk, -(-s // 16)), s)
+    k_chunk = min(k_chunk, s)
+    nq, nk = -(-s // q_chunk), -(-s // k_chunk)
+    sp_q, sp_k = nq * q_chunk, nk * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sp_q - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sp_k - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp_k - s), (0, 0), (0, 0)))
+
+    qc = qp.reshape(b, nq, q_chunk, h, d)
+    kc = kp.reshape(b, nk, k_chunk, h, d)
+    vc = vp.reshape(b, nk, k_chunk, h, d)
+    kc_seq = jnp.moveaxis(kc, 1, 0)
+    vc_seq = jnp.moveaxis(vc, 1, 0)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(k_chunk)
+
+    def make_kv_step(q_blk, q_pos):
+        """q_blk: (b, qc, h, d); q_pos: (qc,) global positions."""
+        def kv_step(carry, inputs):
+            acc, m, l = carry                    # (b,qc,h,d), (b,qc,h), ...
+            k_blk, v_blk, j = inputs             # (b,kc,h,d), ..., scalar
+            s_blk = jnp.einsum("bqhd,bchd->bqhc", q_blk, k_blk,
+                               preferred_element_type=jnp.float32) * scale
+            k_pos = j * k_chunk + k_pos_base     # (kc,)
+            valid = (k_pos < s)[None, None, None, :]
+            if causal:
+                cm = (k_pos[None, :] <= q_pos[:, None])        # (qc, kc)
+                valid = valid & cm[None, :, None, :]
+            s_blk = jnp.where(valid, s_blk, NEG_INF)
+            m_new = jnp.maximum(m, s_blk.max(axis=-1))
+            # p at INPUT precision for the PV matmul: bf16 activations get
+            # bf16 p (halves the materialized probability traffic); the
+            # running (m, l, acc) statistics stay f32 regardless
+            p32 = jnp.exp(s_blk - m_new[..., None])
+            p = p32.astype(out_dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p32.sum(axis=-1)
+            pv = jnp.einsum("bqhc,bchd->bqhd", p, v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+        return kv_step
+
+    def run_q_chunk(i):
+        """Causal skip: q chunk i only ever attends to kv chunks
+        [0, n_need) — the strictly-upper blocks are never lowered, halving
+        attention FLOPs AND score traffic vs the masked-full-scan form.
+        (i is a python int; trip counts stay static for the roofline.)"""
+        q_blk = qc[:, i]
+        q_pos = i * q_chunk + q_pos_base
+        n_need = min(-(-((i + 1) * q_chunk) // k_chunk), nk) if causal else nk
+        acc0 = shard(jnp.zeros((b, q_chunk, h, d), jnp.float32),
+                     "batch", None, "model", None)
+        m0 = jnp.full((b, q_chunk, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, h), jnp.float32)
+        step = make_kv_step(q_blk, q_pos)
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0),
+            (kc_seq[:n_need], vc_seq[:n_need], jnp.arange(n_need)))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jnp.stack([run_q_chunk(i) for i in range(nq)], axis=1)
+    out = out.reshape(b, sp_q, h, d)[:, :s]
+    return out.astype(out_dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, scale: float | None = None):
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, Smax, Hkv, D); cache_len: scalar or
+    (B,) number of valid cache entries (the new token's K/V must already be
+    written at position cache_len - 1).
+
+    Computed as a length-wise full pass (linear in Smax). Under a sharded
+    cache (Smax split across 'model') XLA lowers the softmax reductions to
+    the flash-decoding split-KV combine: partial (max, sum, acc) + psum.
+    """
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    g = h // n_kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, n_kv, g, d)
+    s_all = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))      # (B, Smax)
+    s_all = jnp.where(valid[:, None, None, :], s_all, NEG_INF)
+    m = s_all.max(axis=-1, keepdims=True)
+    p = jnp.exp(s_all - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """O(S^2)-memory oracle for tests."""
+    b, s, h, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    s_all = jnp.einsum("bqhd,bchd->bhqc", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        s_all = jnp.where(mask[None, None], s_all, NEG_INF)
+    p = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bhqc,bchd->bqhd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

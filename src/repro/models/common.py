@@ -1,0 +1,128 @@
+"""Shared building blocks for the model zoo: norms, rope, inits, sharding.
+
+Parameters are plain nested dicts (pytrees). Every init function takes an
+explicit PRNG key. Dtype policy: params fp32, activations cast to
+``config.dtype`` (bf16 by default), losses/logsumexp in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Sharding helpers — logical axes resolved against the active mesh.
+# --------------------------------------------------------------------------
+
+BATCH_AXES = ("pod", "data")   # global-batch shards over all data-like axes
+MODEL_AXIS = "model"
+
+
+def _active_axis_names():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def logical(*axes):
+    """Map logical axis names to a PartitionSpec against the ACTIVE mesh.
+
+    'batch' -> every present axis in BATCH_AXES (as a tuple), 'model' ->
+    MODEL_AXIS if present, None stays None. Unknown names pass through.
+    """
+    present = _active_axis_names()
+    out = []
+    for a in axes:
+        if a == "batch":
+            ax = tuple(x for x in BATCH_AXES if x in present)
+            out.append(ax if ax else None)
+        elif a == "model":
+            out.append(MODEL_AXIS if MODEL_AXIS in present else None)
+        else:
+            out.append(a)
+    return P(*out)
+
+
+def shard(x, *axes):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if not _active_axis_names():
+        return x
+    return jax.lax.with_sharding_constraint(x, logical(*axes))
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------------
+# RoPE (full / partial fraction, as chatglm's 2d rope applies rotary to half
+# the head dims)
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_rot: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32.
+
+    Rotates the first ``fraction`` of head dims (interleaved-pairs layout);
+    the remainder passes through (chatglm3 partial rotary = 0.5).
+    """
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = rope_freqs(d_rot, theta)                     # (d_rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d_rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    x_rot = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([x_rot.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def split_keys(key, names: Sequence[str]):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))

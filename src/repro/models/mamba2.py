@@ -1,0 +1,158 @@
+"""Mamba-2 (SSD) block — chunked parallel scan, TPU-matmul friendly.
+
+Per head h (scalar decay a_t = exp(dt_t * A_h), A_h < 0):
+    h_t = a_t * h_{t-1} + dt_t * x_t (outer) B_t        state (dh, ds)
+    y_t = h_t @ C_t + D_h * x_t
+Chunked form (chunk length Lc): within a chunk the pairwise decay matrix
+M_tj = exp(cum_t - cum_j) is a (Lc, Lc) SCALAR-per-head matrix (cheap and
+numerically safe: only j <= t entries are used and they are <= 1), so the
+intra-chunk contribution is one (Lc, Lc) masked matmul per head and the
+inter-chunk state is carried by a lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+
+
+def init_mamba2(key, d_model: int, *, expand: int = 2, head_dim: int = 64,
+                d_state: int = 64, conv_kernel: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    ks = split_keys(key, ["in", "out", "conv", "dt"])
+    return {
+        # order: [z (d_inner) | xBC (conv_dim) | dt (n_heads)]
+        "in_proj": dense_init(ks["in"], d_model, d_inner + conv_dim + n_heads),
+        "conv_w": jax.random.normal(ks["conv"], (conv_kernel, conv_dim),
+                                    jnp.float32) * (conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks["out"], d_inner, d_model),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:-n_heads]
+    dt = proj[..., -n_heads:]
+    x_in = xbc[..., :d_inner]
+    B = xbc[..., d_inner:d_inner + d_state]
+    C = xbc[..., d_inner + d_state:]
+    return z, x_in, B, C, dt, xbc
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, kernel K: (B, S, C) -> (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def apply_mamba2(p, x, *, head_dim: int = 64, d_state: int = 64,
+                 chunk: int = 128):
+    """x (B, S, D) -> (B, S, D)."""
+    btype = x.dtype
+    bsz, s, d_model = x.shape
+    d_inner = p["norm_w"].shape[0]
+    n_heads = p["A_log"].shape[0]
+
+    proj = x @ p["in_proj"].astype(btype)
+    z, x_in, B, C, dt_raw, xbc = _split_proj(proj, d_inner, d_state, n_heads)
+    xbc = _causal_conv(xbc.astype(jnp.float32), p["conv_w"], p["conv_b"])
+    x_in = xbc[..., :d_inner]
+    B = xbc[..., d_inner:d_inner + d_state]
+    C = xbc[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                           # (H,)
+    loga = dt * A[None, None, :]                                       # <= 0
+
+    lc = min(chunk, s)
+    nc = -(-s // lc)
+    pad = nc * lc - s
+    def cpad(a, v=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                       constant_values=v)
+    xh = cpad(x_in).reshape(bsz, nc, lc, n_heads, head_dim)
+    Bc = cpad(B).reshape(bsz, nc, lc, d_state)
+    Cc = cpad(C).reshape(bsz, nc, lc, d_state)
+    dtc = cpad(dt).reshape(bsz, nc, lc, n_heads)
+    logac = cpad(loga).reshape(bsz, nc, lc, n_heads)
+
+    cum = jnp.cumsum(logac, axis=2)                                    # (B,nc,Lc,H)
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def chunk_step(h, inp):
+        xk, Bk, Ck, dtk, cumk = inp          # (B,Lc,...) for one chunk
+        # intra-chunk: S_tj = (C_t . B_j) * exp(cum_t - cum_j) * dt_j, j<=t
+        CB = jnp.einsum("bts,bjs->btj", Ck, Bk,
+                        preferred_element_type=jnp.float32)            # (B,Lc,Lc)
+        M = jnp.exp(cumk[:, :, None, :] - cumk[:, None, :, :])        # (B,Lc,Lc,H)
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        S = CB[..., None] * M * dtk[:, None, :, :]                    # (B,t,j,H)
+        y_intra = jnp.einsum("btjh,bjhd->bthd", S, xk)
+        # inter-chunk: y_t += exp(cum_t) * C_t @ h
+        y_inter = jnp.einsum("bts,bhds,bth->bthd", Ck, h, jnp.exp(cumk))
+        # state: h' = exp(cum_L) h + sum_j exp(cum_L - cum_j) dt_j x_j (outer) B_j
+        decay_tot = jnp.exp(cumk[:, -1, :])                            # (B,H)
+        w_j = jnp.exp(cumk[:, -1, None, :] - cumk) * dtk               # (B,Lc,H)
+        dB = jnp.einsum("bjh,bjhd,bjs->bhds", w_j, xk, Bk)
+        h_new = h * decay_tot[..., None, None] + dB
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((bsz, n_heads, head_dim, d_state), jnp.float32)
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (xh, Bc, Cc, dtc, cum))
+    h_final, ys = jax.lax.scan(chunk_step, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * lc, n_heads, head_dim)[:, :s]
+    y = y + p["D"][None, None, :, None] * xh.reshape(bsz, nc * lc, n_heads,
+                                                     head_dim)[:, :s]
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm + out proj
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"])
+    return (y.astype(btype) @ p["out_proj"].astype(btype)), h_final
+
+
+def init_mamba_state(bsz: int, n_heads: int, head_dim: int, d_state: int,
+                     conv_dim: int, conv_kernel: int = 4, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((bsz, n_heads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((bsz, conv_kernel - 1, conv_dim), jnp.float32),
+    }
+
+
+def decode_mamba2(p, x, state, *, head_dim: int = 64, d_state: int = 64):
+    """Single-token step. x (B, 1, D); state {'h','conv'} -> (y, new state)."""
+    btype = x.dtype
+    bsz = x.shape[0]
+    d_inner = p["norm_w"].shape[0]
+    n_heads = p["A_log"].shape[0]
+
+    proj = x @ p["in_proj"].astype(btype)
+    z, _, _, _, dt_raw, xbc = _split_proj(proj, d_inner, d_state, n_heads)
+    # rolling conv buffer
+    window = jnp.concatenate([state["conv"], xbc.astype(jnp.float32)], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)                                  # (B, conv_dim)
+    x_in = xbc1[:, :d_inner].reshape(bsz, n_heads, head_dim)
+    B = xbc1[:, d_inner:d_inner + d_state]
+    C = xbc1[:, d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])                      # (B,H)
+    h = state["h"] * a[..., None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt, x_in, B)
+    y = jnp.einsum("bhds,bs->bhd", h, C) + p["D"][None, :, None] * x_in
+    y = y.reshape(bsz, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_w"])
+    out = y.astype(btype) @ p["out_proj"].astype(btype)
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return out, new_state

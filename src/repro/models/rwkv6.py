@@ -1,0 +1,173 @@
+"""RWKV-6 "Finch" block: data-dependent per-channel decay, matrix-valued
+state, token-shift mixing — chunked parallel form for training, O(1)-state
+recurrence for decode.
+
+Recurrence per head (N = head dim; k_t, r_t row-vectors in R^N, v_t in R^N):
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with w_t = exp(-exp(wraw_t)) in (0,1), wraw = w0 + tanh(x_shift @ A) @ B
+(the Finch low-rank data-dependent decay).
+
+Chunked form (chunk Lc): with cum_t = sum_{s<=t} log w_s (per channel),
+    y = (r~ @ k~^T ⊙ strict-lower-mask) v  +  diag-bonus  +  r~ @ S_0
+where r~_t = r_t ⊙ exp(cum_{t-1}), k~_j = k_j ⊙ exp(-cum_j).
+Stability: wraw is clamped to <= 0.65 so log w >= -exp(0.65) ≈ -1.92/step;
+with Lc = 32 the worst-case exp(-cum) ≈ e^61 stays inside fp32 range. The
+clamp bounds the fastest per-step decay at 0.146 — a documented deviation
+(DESIGN.md §8) needed for a kernel-free fp32 chunked form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+
+WRAW_CLAMP = 0.65
+CHUNK = 32
+
+
+def init_rwkv_tmix(key, d_model: int, head_dim: int = 64, lora_dim: int = 64):
+    h = d_model // head_dim
+    ks = split_keys(key, ["r", "k", "v", "g", "o", "wA", "wB"])
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "w0": jnp.full((d_model,), -1.0, jnp.float32),
+        "wA": dense_init(ks["wA"], d_model, lora_dim, scale=0.01),
+        "wB": dense_init(ks["wB"], lora_dim, d_model, scale=0.01),
+        "u": jnp.zeros((h, head_dim), jnp.float32),
+        "Wr": dense_init(ks["r"], d_model, d_model),
+        "Wk": dense_init(ks["k"], d_model, d_model),
+        "Wv": dense_init(ks["v"], d_model, d_model),
+        "Wg": dense_init(ks["g"], d_model, d_model),
+        "Wo": dense_init(ks["o"], d_model, d_model),
+        "ln_w": jnp.ones((d_model,), jnp.float32),
+    }
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int):
+    ks = split_keys(key, ["k", "v", "r"])
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "Wk": dense_init(ks["k"], d_model, d_ff),
+        "Wv": dense_init(ks["v"], d_ff, d_model),
+        "Wr": dense_init(ks["r"], d_model, d_model),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: concat last token of previous state, drop final."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu[None, None, :]
+
+
+def _wkv_chunked(r, k, v, logw, u, head_dim: int):
+    """r,k,v,logw: (B,S,D); u: (H,N). Returns y (B,S,D), S_final (B,H,N,N)."""
+    b, s, d = r.shape
+    h = d // head_dim
+    lc = min(CHUNK, s)
+    nc = -(-s // lc)
+    pad = nc * lc - s
+
+    def prep(a):
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        return a.reshape(b, nc, lc, h, head_dim)
+
+    rr, kk, vv = prep(r), prep(k), prep(v)
+    lw = prep(logw)                                   # log w, <= -eps
+    cum = jnp.cumsum(lw, axis=2)                      # (B,nc,Lc,H,N)
+    mask = jnp.tril(jnp.ones((lc, lc), bool), k=-1)   # strict lower
+
+    def chunk_step(S, inp):
+        rk, kj, vj, cumk, lwk = inp                   # (B,Lc,H,N)...
+        cum_prev = cumk - lwk                         # cum_{t-1}
+        r_t = rk * jnp.exp(cum_prev)                  # decay-adjusted queries
+        k_t = kj * jnp.exp(-cumk)                     # decay-adjusted keys
+        A = jnp.einsum("bthn,bjhn->bhtj", r_t, k_t,
+                       preferred_element_type=jnp.float32)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y = jnp.einsum("bhtj,bjhn->bthn", A, vj)
+        # bonus (current token)
+        bonus = jnp.einsum("bthn,hn,bthn->bth", rk, u, kj)
+        y = y + bonus[..., None] * vj
+        # inter-chunk
+        y = y + jnp.einsum("bthn,bhnm->bthm", r_t, S)
+        # state update: S' = diag(wtot) S + sum_j (k_j * exp(cum_L - cum_j))^T v_j
+        wtot = jnp.exp(cumk[:, -1])                   # (B,H,N)
+        kw = kj * jnp.exp(cumk[:, -1, None] - cumk)
+        S_new = S * wtot[..., None] + jnp.einsum("bjhn,bjhm->bhnm", kw, vj)
+        return S_new, y
+
+    S0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (rr, kk, vv, cum, lw))
+    S_final, ys = jax.lax.scan(chunk_step, S0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * lc, d)[:, :s]
+    return y, S_final
+
+
+def _tmix_inputs(p, x, x_prev):
+    xs = _shift(x, x_prev)
+    xf = x.astype(jnp.float32)
+    xsf = xs.astype(jnp.float32)
+    r = _mix(xf, xsf, p["mu_r"]) @ p["Wr"]
+    k = _mix(xf, xsf, p["mu_k"]) @ p["Wk"]
+    v = _mix(xf, xsf, p["mu_v"]) @ p["Wv"]
+    g = _mix(xf, xsf, p["mu_g"]) @ p["Wg"]
+    xw = _mix(xf, xsf, p["mu_w"])
+    wraw = p["w0"] + jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    logw = -jnp.exp(jnp.minimum(wraw, WRAW_CLAMP))     # <= -0 per channel
+    return r, k, v, g, logw
+
+
+def apply_rwkv_tmix(p, x, x_prev=None, head_dim: int = 64):
+    """x (B,S,D) -> (y, (last_x, S_final)). fp32 internals."""
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    r, k, v, g, logw = _tmix_inputs(p, x, x_prev)
+    u = p["u"]
+    y, S = _wkv_chunked(r, k, v, logw, u, head_dim)
+    h = d // head_dim
+    y = rms_norm(y.reshape(b, s, h, head_dim), jnp.ones((head_dim,)))  # per-head norm
+    y = y.reshape(b, s, d) * p["ln_w"][None, None, :]
+    y = y * jax.nn.silu(g)
+    return (y @ p["Wo"]).astype(x.dtype), (x[:, -1:], S)
+
+
+def apply_rwkv_cmix(p, x, x_prev=None):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    xs = _shift(x, x_prev)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    k = _mix(xf, xsf, p["mu_k"]) @ p["Wk"]
+    r = _mix(xf, xsf, p["mu_r"]) @ p["Wr"]
+    out = (jnp.square(jax.nn.relu(k)) @ p["Wv"]) * jax.nn.sigmoid(r)
+    return out.astype(x.dtype), x[:, -1:]
+
+
+def decode_rwkv_tmix(p, x, state, head_dim: int = 64):
+    """x (B,1,D); state {'x': (B,1,D), 'S': (B,H,N,N)}."""
+    b, _, d = x.shape
+    h = d // head_dim
+    r, k, v, g, logw = _tmix_inputs(p, x, state["x"])
+    rh = r.reshape(b, h, head_dim)
+    kh = k.reshape(b, h, head_dim)
+    vh = v.reshape(b, h, head_dim)
+    w = jnp.exp(logw.reshape(b, h, head_dim))
+    S = state["S"]
+    kv = jnp.einsum("bhn,bhm->bhnm", kh, vh)
+    y = jnp.einsum("bhn,bhnm->bhm", rh, S + p["u"][None, :, :, None] * kv)
+    S_new = S * w[..., None] + kv
+    y = rms_norm(y.reshape(b, 1, h, head_dim), jnp.ones((head_dim,)))
+    y = y.reshape(b, 1, d) * p["ln_w"][None, None, :]
+    y = y * jax.nn.silu(g)
+    return (y @ p["Wo"]).astype(x.dtype), {"x": x, "S": S_new}

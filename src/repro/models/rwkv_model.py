@@ -1,0 +1,102 @@
+"""RWKV-6 (Finch) language model: attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import embed_init, shard, split_keys
+from .rwkv6 import (apply_rwkv_cmix, apply_rwkv_tmix, decode_rwkv_tmix,
+                    init_rwkv_cmix, init_rwkv_tmix, _mix, _tmix_inputs)
+from .transformer import _apply_norm, _init_norm, chunked_ce_loss, lm_head_weight
+
+
+def _block_init(key, cfg: ModelConfig):
+    ks = split_keys(key, ["t", "c"])
+    return {"tmix": init_rwkv_tmix(ks["t"], cfg.d_model, cfg.rwkv_head_dim),
+            "cmix": init_rwkv_cmix(ks["c"], cfg.d_model, cfg.d_ff),
+            "norm1": _init_norm(cfg, cfg.d_model),
+            "norm2": _init_norm(cfg, cfg.d_model)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = split_keys(key, ["embed", "blocks", "head"])
+    layer_keys = jax.random.split(ks["blocks"], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(layer_keys)
+    return {"embed": embed_init(ks["embed"], cfg.vocab_size, cfg.d_model),
+            "blocks": blocks,
+            "final_norm": _init_norm(cfg, cfg.d_model),
+            "head": jax.random.normal(ks["head"],
+                                      (cfg.d_model, cfg.vocab_size),
+                                      jnp.float32) / cfg.d_model ** 0.5}
+
+
+def _block_step(p, cfg: ModelConfig, x):
+    y, _ = apply_rwkv_tmix(p["tmix"], _apply_norm(cfg, p["norm1"], x),
+                           head_dim=cfg.rwkv_head_dim)
+    x = x + y
+    y, _ = apply_rwkv_cmix(p["cmix"], _apply_norm(cfg, p["norm2"], x))
+    return shard(x + y, "batch", None, None)
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard(x, "batch", None, None)
+    fn = functools.partial(_block_step, cfg=cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    x, _ = jax.lax.scan(lambda c, lp: (fn(lp, x=c), None), x, params["blocks"])
+    return _apply_norm(cfg, params["final_norm"], x)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    hidden = forward(params, cfg, batch["tokens"])
+    return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Decode — pure recurrent state, no KV cache (the long_500k path)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None):
+    h = cfg.d_model // cfg.rwkv_head_dim
+    l, d, n = cfg.n_layers, cfg.d_model, cfg.rwkv_head_dim
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "tmix_x": jnp.zeros((l, batch, 1, d), dt),
+        "cmix_x": jnp.zeros((l, batch, 1, d), dt),
+        "S": jnp.zeros((l, batch, h, n, n), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(dt)
+
+    def body(x, inp):
+        # per-layer states as scan xs/ys (carrying the stacks copies them
+        # every iteration — see transformer.decode_step)
+        p, tx_l, cx_l, S_l = inp
+        xin = _apply_norm(cfg, p["norm1"], x)
+        y, st = decode_rwkv_tmix(p["tmix"], xin, {"x": tx_l.astype(xin.dtype),
+                                                  "S": S_l},
+                                 head_dim=cfg.rwkv_head_dim)
+        x = x + y
+        xin2 = _apply_norm(cfg, p["norm2"], x)
+        y2, cx_new = apply_rwkv_cmix(p["cmix"], xin2, cx_l.astype(xin2.dtype))
+        x = x + y2
+        return x, (st["x"].astype(tx_l.dtype), cx_new.astype(cx_l.dtype),
+                   st["S"])
+
+    x, (tx, cx, S) = jax.lax.scan(
+        body, x, (params["blocks"], cache["tmix_x"], cache["cmix_x"],
+                  cache["S"]))
+    h = _apply_norm(cfg, params["final_norm"], x)[:, 0]
+    logits = (h @ lm_head_weight(params, cfg).astype(dt)).astype(jnp.float32)
+    return logits, {"tmix_x": tx, "cmix_x": cx, "S": S,
+                    "pos": cache["pos"] + 1}

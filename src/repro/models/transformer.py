@@ -1,0 +1,366 @@
+"""Dense / MoE / encoder transformer stacks (qwen2, qwen3, chatglm3, granite,
+olmoe, llava backbone, hubert).
+
+Layout choices for 1000+-node scale:
+* homogeneous blocks stacked on a leading layer axis and driven by
+  ``lax.scan`` (+ optional ``jax.checkpoint``): HLO size is O(1) in depth,
+  which keeps 512-device compiles fast and activation live-sets bounded;
+* logits are never materialized over the full sequence — the CE loss scans
+  over sequence chunks of the final hiddens (vocab stays sharded);
+* activations carry a batch sharding constraint after every block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import flash_attention, decode_attention
+from .common import (act_fn, apply_rope, dense_init, embed_init, layer_norm,
+                     rms_norm, shard, split_keys)
+from .moe import apply_moe, init_moe
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def init_attn(key, cfg: ModelConfig):
+    """Attention weights are HEAD-MAJOR: wq (D, H, dh), wo (H, dh, D).
+
+    Flat (D, H*dh) column sharding splits 3584 into 224-wide stripes while
+    the padded head-sharded activations split at 256-wide head boundaries —
+    the mismatch made GSPMD re-gather all heads every layer (2 x 1.07 GB
+    all-gathers per layer on qwen2-7b train_4k; §Perf). With a real head
+    axis, weight and activation shardings agree by construction. KV
+    projections stay replicated (their FLOPs are G times smaller and
+    n_kv_heads rarely divides the TP width)."""
+    dh, h, hkv, d = cfg.head_dim, cfg.padded_heads, cfg.n_kv_heads, cfg.d_model
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], d, h * dh).reshape(d, h, dh),
+        "wk": dense_init(ks["wk"], d, hkv * dh).reshape(d, hkv, dh),
+        "wv": dense_init(ks["wv"], d, hkv * dh).reshape(d, hkv, dh),
+        "wo": dense_init(ks["wo"], h * dh, d,
+                         scale=1.0 / (h * dh) ** 0.5).reshape(h, dh, d),
+    }
+    if h > cfg.n_heads:
+        # padded heads are inert: their wo rows are zero and stay zero (the
+        # attention output is head-masked, so their gradient is zero too)
+        p["wo"] = p["wo"].at[cfg.n_heads:].set(0.0)
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, dh), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, dh), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def init_mlp(key, cfg: ModelConfig):
+    ks = split_keys(key, ["wi", "wg", "wo"])
+    p = {"wi": dense_init(ks["wi"], cfg.d_model, cfg.d_ff),
+         "wo": dense_init(ks["wo"], cfg.d_ff, cfg.d_model)}
+    if cfg.act == "silu":   # gated (SwiGLU); gelu families use plain MLP
+        p["wg"] = dense_init(ks["wg"], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_block(key, cfg: ModelConfig):
+    ks = split_keys(key, ["attn", "ffn", "n1", "n2"])
+    ffn = (init_moe(ks["ffn"], cfg.d_model, cfg.d_ff, cfg.n_experts)
+           if cfg.n_experts else init_mlp(ks["ffn"], cfg))
+    return {"attn": init_attn(ks["attn"], cfg), "ffn": ffn,
+            "norm1": _init_norm(cfg, cfg.d_model),
+            "norm2": _init_norm(cfg, cfg.d_model)}
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Round the vocab up to a 256 multiple so the head/logits shard over
+    'model' (granite's 49155 and hubert's 504 are otherwise replicated —
+    16x the logit memory and head FLOPs). Padded ids are never emitted:
+    the loss masks them from the logsumexp, decode slices them off."""
+    return cfg.vocab_size + (-cfg.vocab_size) % 256
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = split_keys(key, ["embed", "blocks", "head", "final", "posconv"])
+    layer_keys = jax.random.split(ks["blocks"], cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(ks["embed"], padded_vocab(cfg), cfg.d_model),
+        "blocks": blocks,
+        "final_norm": _init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks["head"], cfg.d_model,
+                                    padded_vocab(cfg))
+    if cfg.family == "encoder":
+        # hubert's conv positional embedding (kernel 128, groups 16)
+        g = 16
+        params["pos_conv"] = {
+            "w": jax.random.normal(ks["posconv"],
+                                   (128, cfg.d_model // g, cfg.d_model),
+                                   jnp.float32) * 0.01,
+            "b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def _mask_pad_heads(o, cfg: ModelConfig):
+    """Zero the padded attention heads so they carry no function and no
+    gradient — the padded model is EXACTLY the logical n_heads model."""
+    hp = o.shape[2]
+    if hp == cfg.n_heads:
+        return o
+    mask = (jnp.arange(hp) < cfg.n_heads).astype(o.dtype)
+    return o * mask[None, None, :, None]
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_fraction > 0:
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, cfg: ModelConfig, x, positions):
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = flash_attention(q, k, v, causal=cfg.causal,
+                        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    o = _mask_pad_heads(o, cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def ffn_block(p, cfg: ModelConfig, x):
+    if cfg.n_experts:
+        return apply_moe(p, x, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, act=cfg.act)
+    dt = x.dtype
+    a = act_fn(cfg.act)
+    hi = x @ p["wi"].astype(dt)
+    hidden = a(x @ p["wg"].astype(dt)) * hi if "wg" in p else a(hi)
+    return hidden @ p["wo"].astype(dt)
+
+
+def apply_block(p, cfg: ModelConfig, x, positions):
+    x = x + attn_block(p["attn"], cfg, _apply_norm(cfg, p["norm1"], x), positions)
+    x = shard(x, "batch", None, None)
+    x = x + ffn_block(p["ffn"], cfg, _apply_norm(cfg, p["norm2"], x))
+    return shard(x, "batch", None, None)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            vision_embeds=None):
+    """-> final-norm hiddens (B, S, D) in cfg.dtype."""
+    dt = jnp.dtype(cfg.dtype)
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    else:
+        x = embeds.astype(dt)
+    if vision_embeds is not None:
+        # llava-style prefix splice: vision tokens occupy positions [0, n_vis)
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(dt), (0, 0, 0))
+    if cfg.family == "encoder":
+        pc = params["pos_conv"]
+        pos = jax.lax.conv_general_dilated(
+            x.astype(jnp.float32), pc["w"], (1,), "SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=16)
+        x = x + jax.nn.gelu(pos + pc["b"]).astype(dt)
+    x = shard(x, "batch", None, None)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    block_fn = functools.partial(apply_block, cfg=cfg)
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    def scan_body(carry, layer_params):
+        return block_fn(layer_params, x=carry, positions=positions), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+    return _apply_norm(cfg, params["final_norm"], x)
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            vision_embeds=None, max_len: int | None = None):
+    """Forward pass that ALSO emits the KV cache (real serving prefill).
+
+    Returns (last_logits (B, V), cache). max_len >= S pads the cache for
+    subsequent decode steps.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    else:
+        x = embeds.astype(dt)
+    if vision_embeds is not None:
+        x = jax.lax.dynamic_update_slice(x, vision_embeds.astype(dt), (0, 0, 0))
+    x = shard(x, "batch", None, None)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def block_collect(p, x):
+        xin = _apply_norm(cfg, p["norm1"], x)
+        q, k, v = _qkv(p["attn"], cfg, xin, positions)
+        o = flash_attention(q, k, v, causal=cfg.causal,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+        o = _mask_pad_heads(o, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        x = x + ffn_block(p["ffn"], cfg, _apply_norm(cfg, p["norm2"], x))
+        return shard(x, "batch", None, None), (k, v)
+
+    fn = jax.checkpoint(block_collect) if cfg.remat else block_collect
+    x, (ks, vs) = jax.lax.scan(lambda c, p: fn(p, c), x, params["blocks"])
+    h = _apply_norm(cfg, params["final_norm"], x)[:, -1]
+    logits = (h @ lm_head_weight(params, cfg).astype(dt)).astype(jnp.float32)
+    logits = logits[:, :cfg.vocab_size]          # drop vocab padding
+    if max_len and max_len > s:
+        pad = max_len - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Loss — chunked CE, logits never fully materialized
+# --------------------------------------------------------------------------
+
+def lm_head_weight(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, hidden, labels):
+    """hidden (B, S, D), labels (B, S) int32 with -1 = masked.
+
+    Each chunk is jax.checkpoint'ed: without it the backward pass stacks
+    every chunk's softmax residuals — i.e. silently materializes the full
+    (tokens, vocab) logits tensor the chunking was built to avoid (measured
+    2 x 12.9 GiB/device on granite train_4k). The head may be vocab-padded
+    (see init_params); padded columns are masked out of the logsumexp.
+    """
+    b, s, d = hidden.shape
+    w = lm_head_weight(params, cfg)
+    v_pad = w.shape[-1]
+    c = min(cfg.loss_chunk, s)
+    n = -(-s // c)
+    pad = n * c - s
+    hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = jnp.moveaxis(hidden.reshape(b, n, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk_nll(h, l):
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)    # (B, c, Vp)
+        if v_pad > cfg.vocab_size:
+            pad_mask = jnp.arange(v_pad) < cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None],
+                                  axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * mask
+        return nll.sum(), mask.sum()
+
+    def chunk_loss(carry, inp):
+        tot, cnt = carry
+        nll, m = chunk_nll(*inp)
+        return (tot + nll, cnt + m), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    hidden = forward(params, cfg, batch.get("tokens"),
+                     embeds=batch.get("embeds"),
+                     vision_embeds=batch.get("vision_embeds"))
+    return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    dh, hkv, l = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, max_len, hkv, dh), dt),
+        "v": jnp.zeros((l, batch, max_len, hkv, dh), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """tokens (B,) int32 -> (logits (B, V), new cache). Attention runs over
+    cache[:pos+1]; the new token's KV is written at index pos.
+
+    The per-layer cache slices travel as scan xs/ys (NOT carry): carrying
+    the whole (L, B, S, H, D) stack forces XLA to copy it every iteration
+    (measured 100x byte blowup on olmoe decode_32k)."""
+    dt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(dt)
+    x = shard(x, "batch", None, None)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(x, inp):
+        p, kc_l, vc_l = inp                    # (B, Smax, Hkv, Dh) slices
+        xin = _apply_norm(cfg, p["norm1"], x)
+        q, k, v = _qkv(p["attn"], cfg, xin, positions)
+        kc_l = jax.lax.dynamic_update_slice(kc_l, k.astype(kc_l.dtype),
+                                            (0, pos, 0, 0))
+        vc_l = jax.lax.dynamic_update_slice(vc_l, v.astype(vc_l.dtype),
+                                            (0, pos, 0, 0))
+        o = _mask_pad_heads(decode_attention(q, kc_l, vc_l, pos + 1), cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(dt))
+        x = x + ffn_block(p["ffn"], cfg, _apply_norm(cfg, p["norm2"], x))
+        return x, (kc_l, vc_l)
+
+    x, (kc, vc) = jax.lax.scan(body, x,
+                               (params["blocks"], cache["k"], cache["v"]))
+    h = _apply_norm(cfg, params["final_norm"], x)[:, 0]
+    logits = (h @ lm_head_weight(params, cfg).astype(dt)).astype(jnp.float32)
+    logits = logits[:, :cfg.vocab_size]          # drop vocab padding
+    new_cache = {"k": kc, "v": vc, "pos": pos + 1}
+    return logits, new_cache

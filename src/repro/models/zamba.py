@@ -1,0 +1,180 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with a SHARED transformer block
+(attention + MLP, one set of weights) applied every ``attn_every`` layers.
+
+Training forward avoids per-layer lax.cond by scanning GROUPS: 81 layers with
+attn_every=6 become 13 groups of (6 mamba blocks + shared block) + 3 tail
+mamba blocks — the compiled HLO contains exactly one mamba body and one
+shared-block body regardless of depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import decode_attention
+from .common import embed_init, rms_norm, shard, split_keys
+from .mamba2 import (apply_mamba2, decode_mamba2, init_mamba2,
+                     init_mamba_state)
+from .transformer import (_apply_norm, _init_norm, _qkv, attn_block,
+                          chunked_ce_loss, ffn_block, init_attn, init_mlp,
+                          lm_head_weight)
+
+
+def _mamba_block_init(key, cfg: ModelConfig):
+    ks = split_keys(key, ["m", "n"])
+    return {"mamba": init_mamba2(ks["m"], cfg.d_model, expand=cfg.ssm_expand,
+                                 head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                                 conv_kernel=cfg.conv_kernel),
+            "norm": _init_norm(cfg, cfg.d_model)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = split_keys(key, ["embed", "blocks", "shared", "head", "final"])
+    layer_keys = jax.random.split(ks["blocks"], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _mamba_block_init(k, cfg))(layer_keys)
+    sk = split_keys(ks["shared"], ["attn", "mlp", "n1", "n2"])
+    shared = {"attn": init_attn(sk["attn"], cfg),
+              "mlp": init_mlp(sk["mlp"], cfg),
+              "norm1": _init_norm(cfg, cfg.d_model),
+              "norm2": _init_norm(cfg, cfg.d_model)}
+    return {"embed": embed_init(ks["embed"], cfg.vocab_size, cfg.d_model),
+            "blocks": blocks, "shared": shared,
+            "final_norm": _init_norm(cfg, cfg.d_model),
+            "head": jax.random.normal(ks["head"],
+                                      (cfg.d_model, cfg.vocab_size),
+                                      jnp.float32) / cfg.d_model ** 0.5}
+
+
+def _n_groups(cfg: ModelConfig):
+    g = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, tail
+
+
+def _mamba_step(p, cfg: ModelConfig, x):
+    y, _ = apply_mamba2(p["mamba"], _apply_norm(cfg, p["norm"], x),
+                        head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state)
+    return shard(x + y, "batch", None, None)
+
+
+def _shared_step(p, cfg: ModelConfig, x, positions):
+    x = x + attn_block(p["attn"], cfg, _apply_norm(cfg, p["norm1"], x), positions)
+    x = x + ffn_block(p["mlp"], cfg, _apply_norm(cfg, p["norm2"], x))
+    return shard(x, "batch", None, None)
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard(x, "batch", None, None)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ng, tail = _n_groups(cfg)
+    ae = cfg.attn_every
+
+    mamba_fn = functools.partial(_mamba_step, cfg=cfg)
+    if cfg.remat:
+        mamba_fn = jax.checkpoint(mamba_fn)
+    shared_fn = functools.partial(_shared_step, cfg=cfg, positions=positions)
+    if cfg.remat:
+        shared_fn = jax.checkpoint(shared_fn)
+
+    grouped = jax.tree.map(lambda a: a[:ng * ae].reshape((ng, ae) + a.shape[1:]),
+                           params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[ng * ae:], params["blocks"])
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(lambda c, lp: (mamba_fn(lp, x=c), None), x, gp)
+        return shared_fn(params["shared"], x=x), None
+
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    if tail:
+        x, _ = jax.lax.scan(lambda c, lp: (mamba_fn(lp, x=c), None), x, tail_p)
+    return _apply_norm(cfg, params["final_norm"], x)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    hidden = forward(params, cfg, batch["tokens"])
+    return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    ng, _ = _n_groups(cfg)
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch, n_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim),
+                          jnp.float32),
+        "k": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """Group-structured decode: per-layer mamba states and per-group KV
+    slices travel as scan xs/ys — carrying the full stacks would copy them
+    every one of the 81 iterations (see transformer.decode_step)."""
+    dt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    ae = cfg.attn_every
+    ng, tail = _n_groups(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(dt)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    shared = params["shared"]
+
+    def mamba_body(x, inp):
+        lp, h_l, conv_l = inp
+        y, st = decode_mamba2(lp["mamba"], _apply_norm(cfg, lp["norm"], x),
+                              {"h": h_l, "conv": conv_l},
+                              head_dim=cfg.ssm_head_dim,
+                              d_state=cfg.ssm_state)
+        return x + y, (st["h"], st["conv"])
+
+    def group_body(x, inp):
+        gp, h_g, conv_g, kc_g, vc_g = inp
+        x, (h_g, conv_g) = jax.lax.scan(mamba_body, x, (gp, h_g, conv_g))
+        xin = _apply_norm(cfg, shared["norm1"], x)
+        q, k, v = _qkv(shared["attn"], cfg, xin, positions)
+        kc_g = jax.lax.dynamic_update_slice(kc_g, k.astype(kc_g.dtype),
+                                            (0, pos, 0, 0))
+        vc_g = jax.lax.dynamic_update_slice(vc_g, v.astype(vc_g.dtype),
+                                            (0, pos, 0, 0))
+        o = decode_attention(q, kc_g, vc_g, pos + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           shared["attn"]["wo"].astype(dt))
+        x = x + ffn_block(shared["mlp"], cfg,
+                          _apply_norm(cfg, shared["norm2"], x))
+        return x, (h_g, conv_g, kc_g, vc_g)
+
+    split = ng * ae
+    grp = lambda a: a[:split].reshape((ng, ae) + a.shape[1:])
+    gparams = jax.tree.map(lambda a: grp(a), params["blocks"])
+    x, (h_m, conv_m, kc, vc) = jax.lax.scan(
+        group_body, x,
+        (gparams, grp(cache["h"]), grp(cache["conv"]), cache["k"],
+         cache["v"]))
+    h_m = h_m.reshape((split,) + h_m.shape[2:])
+    conv_m = conv_m.reshape((split,) + conv_m.shape[2:])
+    if tail:
+        tail_p = jax.tree.map(lambda a: a[split:], params["blocks"])
+        x, (h_t, conv_t) = jax.lax.scan(
+            mamba_body, x, (tail_p, cache["h"][split:], cache["conv"][split:]))
+        h_m = jnp.concatenate([h_m, h_t], axis=0)
+        conv_m = jnp.concatenate([conv_m, conv_t], axis=0)
+    hdn = _apply_norm(cfg, params["final_norm"], x)[:, 0]
+    logits = (hdn @ lm_head_weight(params, cfg).astype(dt)).astype(jnp.float32)
+    return logits, {"h": h_m, "conv": conv_m, "k": kc, "v": vc,
+                    "pos": pos + 1}

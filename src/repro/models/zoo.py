@@ -1,0 +1,108 @@
+"""Model facade: one uniform API over all assigned architectures.
+
+    model = build(get_config("qwen2-7b"))
+    params = model.init(jax.random.PRNGKey(0))
+    loss = model.loss(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch x shape) cell — the dry-run lowers against these without any
+allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import rwkv_model, transformer, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]                       # (params, batch) -> scalar
+    forward: Callable[..., Any]                    # (params, batch) -> hiddens
+    prefill: Optional[Callable[..., Any]] = None   # (params, batch) -> (logits, cache)
+    init_cache: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        mod = transformer
+        loss = lambda p, b: transformer.lm_loss(p, cfg, b)
+        fwd = lambda p, b: transformer.forward(
+            p, cfg, b.get("tokens"), embeds=b.get("embeds"),
+            vision_embeds=b.get("vision_embeds"))
+        pre = (lambda p, b, max_len=None: transformer.prefill(
+            p, cfg, b.get("tokens"), embeds=b.get("embeds"),
+            vision_embeds=b.get("vision_embeds"), max_len=max_len))
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            loss=loss, forward=fwd,
+            prefill=pre if cfg.family != "encoder" else None,
+            init_cache=((lambda b, s: transformer.init_cache(cfg, b, s))
+                        if cfg.has_decode else None),
+            decode_step=((lambda p, c, t: transformer.decode_step(p, cfg, c, t))
+                         if cfg.has_decode else None),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: zamba.init_params(key, cfg),
+            loss=lambda p, b: zamba.lm_loss(p, cfg, b),
+            forward=lambda p, b: zamba.forward(p, cfg, b["tokens"]),
+            init_cache=lambda b, s: zamba.init_cache(cfg, b, s),
+            decode_step=lambda p, c, t: zamba.decode_step(p, cfg, c, t),
+        )
+    if cfg.family == "rwkv":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv_model.init_params(key, cfg),
+            loss=lambda p, b: rwkv_model.lm_loss(p, cfg, b),
+            forward=lambda p, b: rwkv_model.forward(p, cfg, b["tokens"]),
+            init_cache=lambda b, s: rwkv_model.init_cache(cfg, b, s),
+            decode_step=lambda p, c, t: rwkv_model.decode_step(p, cfg, c, t),
+        )
+    raise ValueError(f"no model family {cfg.family!r}")
+
+
+# --------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for a (arch x shape) cell, as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encoder":
+            batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), dt)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    model = build(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, shape.seq_len))

@@ -1,0 +1,8 @@
+from .adamw import adamw, AdamWConfig, init_opt_state, apply_updates
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .clipping import clip_by_global_norm
+from .compression import int8_compress, int8_decompress, compressed_psum
+
+__all__ = ["adamw", "AdamWConfig", "init_opt_state", "apply_updates",
+           "cosine_schedule", "linear_warmup_cosine", "clip_by_global_norm",
+           "int8_compress", "int8_decompress", "compressed_psum"]

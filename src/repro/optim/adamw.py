@@ -1,0 +1,50 @@
+"""AdamW, pure-pytree (no optax dependency). Optimizer state shards exactly
+like the parameters (specs reuse param_spec), i.e. ZeRO-free megatron layout:
+m/v live wherever their parameter lives.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw(grads, opt_state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (updates, new_opt_state). lr_scale: schedule multiplier."""
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                     opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(m, v, p):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        return -lr * (u + cfg.weight_decay * p)
+
+    updates = jax.tree.map(upd, m, v, params)
+    return updates, {"m": m, "v": v, "step": step}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,7 @@
+from .random_qubo import (random_ising_problem, problem_set,
+                          paper_benchmark_suite, ProblemSet)
+from .maxcut import random_maxcut, maxcut_problem
+from .partition import number_partitioning
+
+__all__ = ["random_ising_problem", "paper_benchmark_suite", "ProblemSet",
+           "random_maxcut", "maxcut_problem", "number_partitioning"]

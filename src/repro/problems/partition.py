@@ -1,0 +1,23 @@
+"""Number partitioning as bias-free Ising (a classic QUBO family).
+
+Minimize (sum_i a_i s_i)^2 = sum_i a_i^2 + 2 sum_{i<j} a_i a_j s_i s_j
+-> H = -sum_{i<j} J_ij s_i s_j with J_ij = -2 a_i a_j (constant dropped).
+Perfect partitions reach H = -sum_{i<j} |2 a_i a_j| only if balanced; we
+report the residue |sum a_i s_i| as the natural quality metric.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def number_partitioning(values, max_level: int = 15):
+    """Returns (J, residue_fn). J scaled into the DAC range."""
+    a = np.asarray(values, dtype=np.float64)
+    J = -2.0 * np.outer(a, a)
+    np.fill_diagonal(J, 0.0)
+    scale = np.abs(J).max()
+    if scale > 0:
+        J = J / scale * max_level
+    def residue(sigma):
+        return np.abs((a * np.asarray(sigma, dtype=np.float64)).sum(axis=-1))
+    return J.astype(np.float32), residue

@@ -1,0 +1,5 @@
+from .analysis import (HW, collective_bytes_from_hlo, roofline_report,
+                       model_flops, count_params)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_report",
+           "model_flops", "count_params"]

@@ -1,0 +1,6 @@
+from .brute_force import brute_force_ground_state
+from .tabu import tabu_search, best_known
+from .sa import simulated_annealing
+
+__all__ = ["brute_force_ground_state", "tabu_search", "best_known",
+           "simulated_annealing"]

@@ -1,0 +1,60 @@
+"""Single-flip tabu search — the paper's best-known-energy oracle ([7]: the
+qbsolv-style tabu solver). Vectorized over restarts in numpy with O(N)
+incremental field updates per flip.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def tabu_search(J, n_iters: int | None = None, n_restarts: int = 8,
+                tenure: int | None = None, seed: int = 0):
+    """Minimize H = -0.5 s'Js. Returns (best_energy, best_sigma).
+
+    Classic best-improvement tabu: flip the non-tabu spin with the lowest
+    resulting energy (aspiration: tabu moves allowed if they beat the
+    incumbent). dH for flipping k is 2 s_k f_k with f = J s; after flipping k,
+    f_j += -2 s_k^old J_jk.
+    """
+    J = np.asarray(J, dtype=np.float64)
+    n = J.shape[-1]
+    n_iters = n_iters if n_iters is not None else 40 * n
+    tenure = tenure if tenure is not None else max(4, n // 4)
+    rng = np.random.default_rng(seed)
+
+    best_e_global = np.inf
+    best_s_global = None
+    for r in range(n_restarts):
+        s = rng.choice([-1.0, 1.0], size=n)
+        f = J @ s
+        e = -0.5 * s @ f
+        tabu_until = np.full(n, -1, dtype=np.int64)
+        best_e, best_s = e, s.copy()
+        for it in range(n_iters):
+            dH = 2.0 * s * f                       # (n,)
+            cand = e + dH
+            allowed = (tabu_until < it) | (cand < best_e - 1e-12)
+            cand = np.where(allowed, cand, np.inf)
+            k = int(cand.argmin())
+            if not np.isfinite(cand[k]):
+                break
+            # apply flip k
+            e = float(cand[k])
+            f = f - 2.0 * s[k] * J[:, k]
+            s[k] = -s[k]
+            tabu_until[k] = it + tenure
+            if e < best_e - 1e-12:
+                best_e, best_s = e, s.copy()
+        if best_e < best_e_global:
+            best_e_global, best_s_global = best_e, best_s
+    return float(best_e_global), best_s_global.astype(np.int8)
+
+
+def best_known(J_batch, **kw) -> np.ndarray:
+    """Best-known energies for a (P, N, N) batch of problems."""
+    J_batch = np.asarray(J_batch)
+    if J_batch.ndim == 2:
+        J_batch = J_batch[None]
+    seed = kw.pop("seed", 0)
+    return np.array([tabu_search(J, seed=seed + 31 * p, **kw)[0]
+                     for p, J in enumerate(J_batch)])

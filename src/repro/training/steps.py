@@ -1,0 +1,60 @@
+"""Jitted train / eval step builders shared by the trainer and the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import build
+from ..optim import (AdamWConfig, adamw, apply_updates, clip_by_global_norm,
+                     init_opt_state, linear_warmup_cosine)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    model = build(cfg)
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    total_steps: int = 10_000, warmup_steps: int = 200,
+                    max_grad_norm: float = 1.0) -> Callable:
+    """(state, batch) -> (state, metrics). Pure function, jit/pjit-ready."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = build(cfg)
+
+    def step_fn(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        # schedule indexed at step+1 so the very first step has nonzero lr
+        lr_scale = linear_warmup_cosine(state.step + 1, warmup_steps,
+                                        total_steps)
+        updates, opt = adamw(grads, state.opt, state.params, opt_cfg, lr_scale)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return step_fn
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    model = build(cfg)
+
+    def eval_fn(params, batch):
+        return model.loss(params, batch)
+
+    return eval_fn

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the real (1-CPU) device set — only the
+# dry-run forces 512 host devices, inside its own module/process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

@@ -1,0 +1,110 @@
+"""Energy functions and QUBO/Max-Cut mappings (paper Eq. 1-2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (absorb_fields, fix_gauge, flip_deltas, ising_energy,
+                        local_field, maxcut_to_ising, maxcut_value,
+                        qubo_to_ising)
+from repro.problems import random_ising_problem, random_maxcut
+
+
+def _rand_sym(rng, n):
+    J = rng.normal(size=(n, n))
+    J = J + J.T
+    np.fill_diagonal(J, 0)
+    return J
+
+
+def test_energy_matches_definition(rng):
+    n = 12
+    J = _rand_sym(rng, n)
+    s = rng.choice([-1.0, 1.0], size=n)
+    brute = -sum(J[i, j] * s[i] * s[j]
+                 for i in range(n) for j in range(i + 1, n))
+    assert np.isclose(float(ising_energy(jnp.asarray(J), jnp.asarray(s))),
+                      brute, atol=1e-6)
+
+
+def test_energy_broadcasting(rng):
+    J = np.stack([_rand_sym(rng, 8) for _ in range(3)])
+    s = rng.choice([-1.0, 1.0], size=(3, 5, 8))
+    e = np.asarray(ising_energy(jnp.asarray(J), jnp.asarray(s)))
+    assert e.shape == (3, 5)
+    for p in range(3):
+        for r in range(5):
+            assert np.isclose(
+                e[p, r], float(ising_energy(jnp.asarray(J[p]),
+                                            jnp.asarray(s[p, r]))), atol=1e-5)
+
+
+def test_flip_deltas(rng):
+    n = 10
+    J = _rand_sym(rng, n)
+    s = rng.choice([-1.0, 1.0], size=n)
+    e0 = float(ising_energy(jnp.asarray(J), jnp.asarray(s)))
+    dH = np.asarray(flip_deltas(jnp.asarray(J), jnp.asarray(s)))
+    for k in range(n):
+        s2 = s.copy()
+        s2[k] = -s2[k]
+        e1 = float(ising_energy(jnp.asarray(J), jnp.asarray(s2)))
+        assert np.isclose(dH[k], e1 - e0, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_qubo_to_ising_identity(seed):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(2, 10)
+    Q = rng.normal(size=(n, n))
+    Q = 0.5 * (Q + Q.T)
+    J, h, c = qubo_to_ising(Q)
+    x = rng.integers(0, 2, size=n).astype(np.float64)
+    s = 2 * x - 1
+    qubo_val = float(x @ Q @ x)
+    ising_val = float(-0.5 * s @ J @ s - h @ s + c)
+    assert np.isclose(qubo_val, ising_val, atol=1e-9)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_maxcut_energy_relation(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 12))
+    W = random_maxcut(n, 0.6, seed=seed)
+    J = maxcut_to_ising(W)
+    s = rng.choice([-1.0, 1.0], size=n)
+    cut = float(maxcut_value(W, s))
+    # cut = 0.5*total - 0.5*sum_{i<j} W s s  and H = -sum_{i<j} J s s = +sum W s s/... J=-W
+    total = np.triu(W, 1).sum()
+    H = float(ising_energy(jnp.asarray(J), jnp.asarray(s)))
+    # H = -0.5 s(-W)s = 0.5 sWs = sum_{i<j} W_ij s_i s_j
+    assert np.isclose(cut, 0.5 * (total - H), atol=1e-5)
+
+
+def test_absorb_fields_gauge(rng):
+    n = 8
+    J = _rand_sym(rng, n)
+    h = rng.normal(size=n)
+    J2 = absorb_fields(J, h)
+    s = rng.choice([-1.0, 1.0], size=n)
+    for s0 in (1.0, -1.0):
+        ext = np.concatenate([[s0], s * s0])   # gauge-fixed
+        e_ext = float(ising_energy(jnp.asarray(J2), jnp.asarray(ext)))
+        e_orig = float(-0.5 * s @ J @ s - h @ s)
+        assert np.isclose(e_ext, e_orig, atol=1e-6)
+    flipped = fix_gauge(jnp.asarray(np.concatenate([[-1.0], s])))
+    assert float(flipped[0]) == 1.0
+
+
+def test_random_problem_properties(rng):
+    J = random_ising_problem(32, 0.5, rng)
+    assert J.shape == (32, 32)
+    assert np.allclose(J, J.T)
+    assert np.all(np.diag(J) == 0)
+    assert np.abs(J).max() <= 15
+    offdiag = J[np.triu_indices(32, 1)]
+    dens = (offdiag != 0).mean()
+    assert 0.3 < dens < 0.7
+    assert np.all(J == np.round(J))

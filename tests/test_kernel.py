@@ -1,0 +1,93 @@
+"""Pallas fused-anneal kernel vs the pure-jnp oracle (interpret mode).
+
+Shape/dtype sweep per the harness requirement; padding paths (N not a lane
+multiple, R not a block multiple) are covered explicitly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DeviceModel, PerturbationConfig, NOMINAL, schedule_table
+from repro.core.annealer import anneal
+from repro.core.lfsr import lfsr_voltage_inits
+from repro.kernels import fused_anneal_kernel, fused_anneal_ref, ops
+from repro.problems import problem_set
+
+
+def _setup(n, p, r, seed=0, sweeps=0.5):
+    dev = DeviceModel(n_spins=n, anneal_sweeps=sweeps)
+    ps = problem_set(n, 0.5, p, seed=seed)
+    J = np.asarray(dev.quantize(jnp.asarray(ps.J)))
+    v0 = np.stack([lfsr_voltage_inits(n, r, seed=seed + i) for i in range(p)])
+    return dev, J, v0
+
+
+@pytest.mark.parametrize("n,p,r", [
+    (64, 1, 128),      # paper chip, exact block
+    (64, 2, 130),      # run padding
+    (48, 1, 64),       # lane padding (48 < 128)
+    (100, 1, 32),      # both paddings
+    (128, 2, 128),     # exact lane boundary
+])
+def test_kernel_matches_ref(n, p, r):
+    dev, J, v0 = _setup(n, p, r)
+    pert = PerturbationConfig()
+    scales = schedule_table(dev, pert, n_cols=n)
+    v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt, dev.vdd)
+    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
+                              vdd=dev.vdd, interpret=True)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_matches_annealer_end_to_end():
+    dev, J, v0 = _setup(64, 2, 64, seed=4, sweeps=1.0)
+    pert = PerturbationConfig()
+    res = anneal(jnp.asarray(J), jnp.asarray(v0), dev, pert)
+    v_k, sigma_k, e_k = ops.fused_anneal(J, v0, dev, pert, interpret=True)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(res.v_final),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(sigma_k), np.asarray(res.sigma))
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(res.energy),
+                               rtol=1e-6)
+
+
+def test_kernel_nominal_mode():
+    dev, J, v0 = _setup(64, 1, 32, seed=9)
+    scales = schedule_table(dev, NOMINAL)
+    v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt)
+    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_kernel_property_random_problems(seed):
+    dev, J, v0 = _setup(32, 1, 16, seed=seed, sweeps=0.25)
+    scales = schedule_table(dev, PerturbationConfig(period_slots=24,
+                                                    off_slots=4,
+                                                    settle_sweeps=0.1))
+    v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt)
+    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(v_k) >= 0) and np.all(np.asarray(v_k) <= 1)
+
+
+def test_kernel_block_r_variants():
+    dev, J, v0 = _setup(64, 1, 256, seed=2)
+    scales = schedule_table(dev, PerturbationConfig())
+    outs = []
+    for block_r in (64, 128, 256):
+        outs.append(np.asarray(fused_anneal_kernel(
+            J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
+            block_r=block_r, interpret=True)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6)

@@ -1,0 +1,67 @@
+"""LFSR spin initializer and DAC/ADC device model."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DeviceModel, lfsr64_states, lfsr_spin_inits, lfsr_voltage_inits
+
+
+def test_lfsr_deterministic_and_shifting():
+    a = lfsr64_states(0xDEAD, 100)
+    b = lfsr64_states(0xDEAD, 100)
+    assert np.array_equal(a, b)
+    # consecutive states: state[k+1] = shift(state[k]) -> strictly different
+    assert np.all(a[1:] != a[:-1])
+
+
+def test_lfsr_no_short_cycles():
+    states = lfsr64_states(1, 10_000)
+    assert len(np.unique(states)) == 10_000   # maximal-length taps
+
+
+def test_spin_inits_shape_and_values():
+    s = lfsr_spin_inits(64, 50, seed=3)
+    assert s.shape == (50, 64)
+    assert set(np.unique(s)) <= {-1, 1}
+    # consecutive runs differ (one LFSR shift per solve)
+    assert np.any(s[0] != s[1])
+    # tiling beyond 64 spins
+    s2 = lfsr_spin_inits(130, 10, seed=3)
+    assert s2.shape == (10, 130)
+
+
+def test_voltage_inits_levels():
+    v = lfsr_voltage_inits(64, 20, seed=1, vdd=1.0, swing=0.5)
+    assert set(np.round(np.unique(v), 6)) <= {0.25, 0.75}
+
+
+def test_quantize_paper_range():
+    dev = DeviceModel()
+    J = jnp.asarray(np.arange(-15, 16, dtype=np.float32))[None, :] * jnp.eye(31)
+    q = dev.quantize(J)
+    assert float(jnp.max(q)) <= dev.max_level
+    assert float(jnp.min(q)) >= -dev.max_level
+    # integer problems in [-15, 15] are unchanged
+    rng = np.random.default_rng(0)
+    Ji = rng.integers(-15, 16, size=(16, 16)).astype(np.float32)
+    np.fill_diagonal(Ji, 0)
+    assert np.array_equal(np.asarray(dev.quantize(jnp.asarray(Ji))), Ji)
+    assert dev.n_levels == 31
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_adc_threshold(v):
+    dev = DeviceModel()
+    out = float(dev.adc(jnp.asarray(v)))
+    assert out == (1.0 if v >= 0.5 else -1.0)
+
+
+def test_timing_constants():
+    dev = DeviceModel()
+    assert dev.n_steps == int(3.75 * 64 * dev.substeps)
+    assert np.isclose(dev.dt * dev.slots_per_sweep * dev.substeps, 1.0)
+    from repro.core import anneal_time_seconds
+    assert np.isclose(anneal_time_seconds(dev), 3e-6)  # the paper's 3 us

@@ -1,0 +1,70 @@
+"""Software solvers (tabu/SA/brute force) and the paper's metrology."""
+import numpy as np
+import pytest
+
+from repro.metrics import (energy_to_solution, normalized_ets,
+                           paper_hw_constants, success_rate,
+                           time_to_solution, tts_distribution)
+from repro.problems import problem_set
+from repro.solvers import (best_known, brute_force_ground_state,
+                           simulated_annealing, tabu_search)
+
+
+def test_tabu_matches_brute_force():
+    ps = problem_set(14, 0.6, 4, seed=3)
+    for J in ps.J:
+        e_bf, _ = brute_force_ground_state(J)
+        e_tb, s_tb = tabu_search(J, seed=1)
+        assert np.isclose(e_tb, e_bf), (e_tb, e_bf)
+        # returned config matches returned energy
+        f = J @ s_tb.astype(np.float64)
+        assert np.isclose(-0.5 * s_tb @ f, e_tb)
+
+
+def test_sa_close_to_optimum():
+    ps = problem_set(16, 0.5, 2, seed=9)
+    for J in ps.J:
+        e_bf, _ = brute_force_ground_state(J)
+        e_sa, _ = simulated_annealing(J, seed=2)
+        assert e_sa <= 0.95 * e_bf + 1e-9  # within 5% (energies negative)
+
+
+def test_brute_force_z2_symmetry():
+    ps = problem_set(10, 0.8, 1, seed=1)
+    e, s = brute_force_ground_state(ps.J[0])
+    assert s[0] == 1  # gauge fixed
+    e2 = -0.5 * (-s) @ ps.J[0].astype(np.float64) @ (-s)
+    assert np.isclose(e, e2)
+
+
+def test_success_rate_thresholding():
+    best = np.array([-100.0])
+    energies = np.array([[-100.0, -99.5, -99.0, -98.9, -50.0]])
+    sr = success_rate(energies, best, frac=0.99)
+    assert np.isclose(sr[0], 3 / 5)   # -100, -99.5, -99 pass
+
+
+def test_tts_formula():
+    tau = 3e-6
+    # p = 0.5 -> ln(0.01)/ln(0.5) = 6.64 runs
+    assert np.isclose(time_to_solution(0.5, tau), tau * np.log(0.01) / np.log(0.5))
+    assert time_to_solution(0.0, tau) == np.inf
+    assert time_to_solution(0.999999, tau) == tau  # floored at one run
+    # paper's median: p such that TTS = 0.72 ms
+    p = 1 - 0.01 ** (tau / 0.72e-3)
+    assert np.isclose(time_to_solution(p, tau), 0.72e-3, rtol=1e-6)
+
+
+def test_paper_ets_arithmetic():
+    """Table II: 31.6 mW x 0.72 ms = 22.76 uJ; / (log2(31)*64*63/2) = 2.28 nJ."""
+    hw = paper_hw_constants()
+    ets = energy_to_solution(hw.power_w, 0.72e-3)
+    assert np.isclose(ets * 1e6, 22.752, atol=0.01)
+    norm = normalized_ets(ets, hw.coeff_levels, hw.n_spins, hw.interactions)
+    assert np.isclose(norm * 1e9, 2.28, atol=0.01)
+
+
+def test_tts_distribution_summary():
+    d = tts_distribution([0.0, 0.5, 1.0], 3e-6)
+    assert d["solved_fraction"] == pytest.approx(2 / 3)
+    assert np.isfinite(d["median"])
