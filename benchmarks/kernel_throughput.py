@@ -1,62 +1,94 @@
-"""Anneal-throughput microbench: fused Pallas path (interpret on CPU;
-compiled on TPU) vs the pure-jnp scan reference — anneals/second and
-simulated-chip equivalents (one chip = 1/(3us) = 333k anneals/s/die).
+"""Anneal-throughput microbench over the AnnealEngine paths.
+
+Times three solvers on the same problem set and records anneals/second:
+
+  scan   — pure-JAX lax.scan reference (the CPU/GPU hot path)
+  fused  — Pallas VMEM kernel, schedule derived in-kernel (interpret mode
+           on CPU — a correctness harness, not a speed claim; compiled on
+           TPU)
+  jax-sa — the on-device simulated-annealing baseline (vmapped restarts)
+
+Also verifies the JAX SA port against the numpy SA baseline on a fixed
+seed set (both must land on the same best energies). Results go to
+``experiments/bench/kernel_throughput.json`` (historic location) AND
+``BENCH_kernel.json`` at the repo root, so CI archives the perf trajectory
+from every run. One chip-die equivalent = 1/(3 us) ~ 333k anneals/s.
 """
 from __future__ import annotations
 
-import time
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DeviceModel, DEFAULT_PERTURBATION, schedule_table
-from repro.core.annealer import anneal
+from repro.core import AnnealEngine, DeviceModel, DEFAULT_PERTURBATION
+from repro.core.engine import time_call
 from repro.core.lfsr import lfsr_voltage_inits
-from repro.kernels import ops
 from repro.problems import problem_set
+from repro.solvers import simulated_annealing, simulated_annealing_jax
 
 from .common import record, csv_line
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernel.json")
 
 
 def run(full: bool = False):
     n, P, R = 64, 2, 128
+    sa_sweeps, sa_restarts = (200, 64) if full else (60, 16)
     dev = DeviceModel(n_spins=n, anneal_sweeps=1.0)   # short anneal for bench
     ps = problem_set(n, 0.5, P, seed=5)
     J = np.asarray(dev.quantize(ps.J))
     v0 = np.stack([lfsr_voltage_inits(n, R, seed=i) for i in range(P)])
-
-    # jnp path
-    r = anneal(jnp.asarray(J), jnp.asarray(v0), dev, DEFAULT_PERTURBATION)
-    jax.block_until_ready(r.v_final)
-    t0 = time.time()
-    iters = 3
-    for _ in range(iters):
-        r = anneal(jnp.asarray(J), jnp.asarray(v0), dev, DEFAULT_PERTURBATION)
-        jax.block_until_ready(r.v_final)
-    t_jnp = (time.time() - t0) / iters
-
-    # pallas interpret path (correctness-mode on CPU; compiled on TPU)
-    v, sig, e = ops.fused_anneal(J, v0, dev, DEFAULT_PERTURBATION)
-    jax.block_until_ready(v)
-    t0 = time.time()
-    v, sig, e = ops.fused_anneal(J, v0, dev, DEFAULT_PERTURBATION)
-    jax.block_until_ready(v)
-    t_pallas = time.time() - t0
-
     anneals = P * R
+
+    scan_eng = AnnealEngine(device=dev, perturbation=DEFAULT_PERTURBATION,
+                            path="scan")
+    fused_eng = AnnealEngine(device=dev, perturbation=DEFAULT_PERTURBATION,
+                             path="fused")
+
+    t_scan = time_call(lambda: scan_eng.run(J, v0))
+    t_fused = time_call(lambda: fused_eng.run(J, v0), iters=1)
+    t_sa = time_call(lambda: simulated_annealing_jax(
+        J, n_sweeps=sa_sweeps, n_restarts=sa_restarts, seed=0)[0], iters=1)
+    sa_anneals = P * sa_restarts
+
+    # -- JAX SA vs numpy SA: same best energy on a fixed seed set ----------
+    match_ps = problem_set(32, 0.5, 2, seed=77)
+    Jm = np.asarray(dev.quantize(match_ps.J))
+    e_np = np.array([simulated_annealing(Jm[p], n_sweeps=300, n_restarts=64,
+                                         seed=p)[0] for p in range(2)])
+    e_jx, _ = simulated_annealing_jax(Jm, n_sweeps=300, n_restarts=64, seed=0)
+    sa_match = bool(np.allclose(e_np, e_jx))
+
+    on_tpu = jax.default_backend() == "tpu"
     payload = {
+        "backend": jax.default_backend(),
         "anneals": anneals, "steps": dev.n_steps,
-        "jnp_s": t_jnp, "pallas_interpret_s": t_pallas,
-        "jnp_anneals_per_s": anneals / t_jnp,
-        "note": "pallas timing is interpret=True (Python) on CPU — "
-                "correctness mode, not a speed claim; TPU projections in "
-                "EXPERIMENTS.md use the dry-run roofline instead",
+        "scan_s": t_scan, "fused_s": t_fused, "jax_sa_s": t_sa,
+        "scan_anneals_per_s": anneals / t_scan,
+        "fused_anneals_per_s": anneals / t_fused,
+        "jax_sa_anneals_per_s": sa_anneals / t_sa,
+        "jax_sa_sweeps": sa_sweeps, "jax_sa_restarts": sa_restarts,
+        "chip_equiv_dies_scan": anneals / t_scan / 333333.0,
+        "sa_best_energy_numpy": e_np.tolist(),
+        "sa_best_energy_jax": np.asarray(e_jx).tolist(),
+        "sa_jax_matches_numpy": sa_match,
+        "note": ("fused timing is interpret=True (Python) off-TPU — "
+                 "correctness mode, not a speed claim; TPU projections in "
+                 "EXPERIMENTS.md use the dry-run roofline instead"
+                 if not on_tpu else "fused compiled on TPU"),
     }
     record("kernel_throughput", payload)
-    print(csv_line("kernel_throughput", t_jnp * 1e6 / anneals,
-                   f"jnp={anneals/t_jnp:.0f}anneals/s;"
-                   f"chip_equiv={anneals/t_jnp/333333:.4f}dies"))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(csv_line("kernel_throughput", t_scan * 1e6 / anneals,
+                   f"scan={anneals/t_scan:.0f}anneals/s;"
+                   f"fused={anneals/t_fused:.0f}anneals/s;"
+                   f"jax_sa={sa_anneals/t_sa:.0f}anneals/s;"
+                   f"sa_match={sa_match}"))
     return payload
 
 

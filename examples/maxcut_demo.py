@@ -11,7 +11,7 @@ from repro.solvers import brute_force_ground_state, tabu_search
 
 # -- small graph: exact check ------------------------------------------------
 W, J = maxcut_problem(n=16, density=0.5, seed=3)
-machine = IsingMachine()
+machine = IsingMachine(backend="auto")     # AnnealEngine picks the path
 out = machine.solve(J, num_runs=200, seed=1)
 best_cut_im = float(maxcut_value(W, out.best_sigma[0]))
 _, s_exact = brute_force_ground_state(J)

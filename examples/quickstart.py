@@ -18,7 +18,12 @@ ps = problem_set(N, density=0.5, num_problems=PROBLEMS, seed=42)
 bk = best_known(ps.J, seed=1)
 print("best-known energies (tabu oracle):", bk)
 
-machine = IsingMachine()                       # landscape perturbation ON
+# 'auto' lets the AnnealEngine pick the path (fused Pallas kernel on TPU,
+# lax.scan elsewhere) and the run-block size from its autotune cache.
+machine = IsingMachine(backend="auto")         # landscape perturbation ON
+plan = machine.engine.plan(PROBLEMS, RUNS, N)
+print(f"engine plan: path={plan.path} block_r={plan.block_r} "
+      f"j_dtype={plan.j_dtype} ({plan.reason})")
 out = machine.solve(ps.J, num_runs=RUNS, seed=7)
 sr = out.success_rate(bk)
 print(f"\nwith landscape perturbation: best={out.best_energy}")

@@ -1,7 +1,10 @@
 """Core: digital twin of the 64-spin all-to-all CMOS Ising machine."""
 from .device_model import DeviceModel, DEFAULT_DEVICE, chip_power_watts, anneal_time_seconds
-from .perturbation import PerturbationConfig, DEFAULT_PERTURBATION, NOMINAL, column_scales, schedule_table
+from .perturbation import (PerturbationConfig, DEFAULT_PERTURBATION, NOMINAL,
+                           column_scales, scales_from_cols, schedule_table,
+                           unit_scales)
 from .annealer import anneal, AnnealResult, anneal_energy_trace
+from .engine import AnnealEngine, EnginePlan
 from .machine import IsingMachine, SolveOutput
 from .hamiltonian import (ising_energy, local_field, flip_deltas, qubo_to_ising,
                           maxcut_to_ising, maxcut_value, absorb_fields, fix_gauge)
@@ -10,7 +13,9 @@ from .lfsr import lfsr_spin_inits, lfsr_voltage_inits, lfsr64_states
 __all__ = [
     "DeviceModel", "DEFAULT_DEVICE", "chip_power_watts", "anneal_time_seconds",
     "PerturbationConfig", "DEFAULT_PERTURBATION", "NOMINAL", "column_scales",
-    "schedule_table", "anneal", "AnnealResult", "anneal_energy_trace",
+    "scales_from_cols", "schedule_table", "unit_scales",
+    "anneal", "AnnealResult", "anneal_energy_trace",
+    "AnnealEngine", "EnginePlan",
     "IsingMachine", "SolveOutput", "ising_energy", "local_field", "flip_deltas",
     "qubo_to_ising", "maxcut_to_ising", "maxcut_value", "absorb_fields",
     "fix_gauge", "lfsr_spin_inits", "lfsr_voltage_inits", "lfsr64_states",

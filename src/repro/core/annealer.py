@@ -37,7 +37,12 @@ class AnnealResult:
 
 
 def _step(v, t, J, dev: DeviceModel, pert: PerturbationConfig, noise=None):
-    s = column_scales(t, dev, pert, n_cols=J.shape[-1])
+    # drive_dt folded into the per-column scales OUTSIDE the matvec (the
+    # same grouping as the fused kernel and ref oracle, keeping the three
+    # paths bit-identical in f32; for power-of-two drive_dt — the default —
+    # the fold is an exact exponent shift, so results are unchanged).
+    s = column_scales(t, dev, pert, n_cols=J.shape[-1]) \
+        * (dev.drive_eff * dev.dt)
     # ADC emits int8 spins: the chip's spin wires are 1-bit, so when the
     # spin axis is sharded the cross-shard exchange moves 4x fewer bytes
     # than f32 (§Perf ising iteration 2). Numerically exact (+-1).
@@ -45,8 +50,7 @@ def _step(v, t, J, dev: DeviceModel, pert: PerturbationConfig, noise=None):
     q8 = _replicate_spin_axis(q8)
     sq = (q8.astype(jnp.float32) * s).astype(J.dtype)  # column scales fold
     dv = jnp.einsum("pij,prj->pri", J, sq,
-                    preferred_element_type=jnp.float32) \
-        * (dev.drive_eff * dev.dt)
+                    preferred_element_type=jnp.float32)
     if noise is not None:
         dv = dv + noise
     return jnp.clip(v + dv, 0.0, dev.vdd)
@@ -57,7 +61,10 @@ def _replicate_spin_axis(q8):
     constraint GSPMD all-gathers the post-scale f32 form (4x the bytes).
     The spin axis is forced replicated; problem/run axes stay unconstrained
     so run-sharded layouts remain communication-free."""
-    mesh = jax.sharding.get_abstract_mesh()
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_mesh is None:        # jax < 0.5 has no ambient-mesh API: no mesh
+        return q8               # context to constrain against, so no-op
+    mesh = get_mesh()
     if mesh is None or not mesh.axis_names:
         return q8
     U = jax.sharding.PartitionSpec.UNCONSTRAINED

@@ -5,9 +5,12 @@ Usage:
     out = m.solve(J, num_runs=1000, seed=7)     # J: (N,N) or (P,N,N)
     out.best_energy, out.success_rate(best_known)
 
-Backends:
-    'jnp'    — lax.scan reference (runs anywhere; the dry-run path)
+Backends (legacy spelling of AnnealEngine paths — solve() dispatches through
+``core.engine.AnnealEngine``; ``backend="auto"`` + ``autotune=True`` are the
+new knobs):
+    'jnp'    — scan path (lax.scan reference; runs anywhere; the dry-run path)
     'pallas' — fused VMEM anneal kernel (TPU target; interpret=True on CPU)
+    'auto'   — let the engine pick (fused on TPU, scan elsewhere, cache-aware)
 """
 from __future__ import annotations
 
@@ -18,11 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .annealer import anneal, AnnealResult
 from .device_model import DeviceModel
-from .hamiltonian import ising_energy
+from .engine import AnnealEngine
 from .lfsr import lfsr_voltage_inits
 from .perturbation import PerturbationConfig, DEFAULT_PERTURBATION, NOMINAL
+
+_BACKEND_TO_PATH = {"jnp": "scan", "pallas": "fused", "auto": "auto"}
 
 
 @dataclasses.dataclass
@@ -54,12 +58,17 @@ class IsingMachine:
     def __init__(self,
                  device: DeviceModel | None = None,
                  perturbation: PerturbationConfig | None = None,
-                 backend: str = "jnp"):
+                 backend: str = "jnp",
+                 autotune: bool = False):
         self.device = device or DeviceModel()
         self.perturbation = perturbation if perturbation is not None else DEFAULT_PERTURBATION
-        if backend not in ("jnp", "pallas"):
+        if backend not in _BACKEND_TO_PATH:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
+        self.engine = AnnealEngine(device=self.device,
+                                   perturbation=self.perturbation,
+                                   path=_BACKEND_TO_PATH[backend],
+                                   autotune=autotune)
 
     # ------------------------------------------------------------------
     def solve(self, J, num_runs: int = 100, seed: int = 0,
@@ -87,24 +96,16 @@ class IsingMachine:
             for p in range(P)
         ])  # (P, R, N)
 
-        if self.backend == "pallas":
-            from ..kernels import ops as kops
-            v, sigma, energy = kops.fused_anneal(Jq, jnp.asarray(v0), dev,
-                                                 self.perturbation)
-            traj = None
-            if record_every:
-                res = anneal(Jq, v0, dev, self.perturbation, key=key,
-                             record_every=record_every)
-                traj = res.energy_traj
-        else:
-            res = anneal(Jq, v0, dev, self.perturbation, key=key,
-                         record_every=record_every)
-            v, sigma, energy, traj = res.v_final, res.sigma, res.energy, res.energy_traj
+        # All paths dispatch through the AnnealEngine; it falls back to the
+        # scan path automatically when noise/trajectory recording is asked
+        # for (features the fused kernel doesn't materialize).
+        res = self.engine.run(Jq, v0, key=key, record_every=record_every)
 
         return SolveOutput(
-            sigma=np.asarray(sigma), energy=np.asarray(energy),
-            v_final=np.asarray(v),
-            energy_traj=None if traj is None else np.asarray(traj))
+            sigma=np.asarray(res.sigma), energy=np.asarray(res.energy),
+            v_final=np.asarray(res.v_final),
+            energy_traj=(None if res.energy_traj is None
+                         else np.asarray(res.energy_traj)))
 
     # ------------------------------------------------------------------
     def gradient_descent_baseline(self) -> "IsingMachine":
@@ -112,10 +113,14 @@ class IsingMachine:
         leakage disabled (ideal refresh), no noise."""
         dev = dataclasses.replace(self.device, tau_leak_sweeps=float("inf"),
                                   noise_sigma=0.0)
-        return IsingMachine(device=dev, perturbation=NOMINAL, backend=self.backend)
+        return IsingMachine(device=dev, perturbation=NOMINAL,
+                            backend=self.backend,
+                            autotune=self.engine.autotune_enabled)
 
     def inherent_noise_baseline(self, sigma: float = 2.0) -> "IsingMachine":
         """Measured-chip baseline of Fig. 4: no deterministic perturbation,
         only circuit noise."""
         dev = dataclasses.replace(self.device, noise_sigma=sigma)
-        return IsingMachine(device=dev, perturbation=NOMINAL, backend=self.backend)
+        return IsingMachine(device=dev, perturbation=NOMINAL,
+                            backend=self.backend,
+                            autotune=self.engine.autotune_enabled)

@@ -58,22 +58,23 @@ NOMINAL = PerturbationConfig(off_slots=0)
 DEFAULT_PERTURBATION = PerturbationConfig()
 
 
-def column_scales(step, dev: DeviceModel, pert: PerturbationConfig,
-                  n_cols: int | None = None, dtype=jnp.float32):
-    """Effective per-column coupling scale s_j at Euler step ``step``.
+def scales_from_cols(step, col_ids, dev: DeviceModel, pert: PerturbationConfig,
+                     dtype=jnp.float32):
+    """Closed-form column scales for an arbitrary-shaped array of column
+    indices — the SINGLE implementation shared by the host-side
+    ``column_scales`` (1-D ``arange``) and the Pallas fused kernel (2-D
+    ``broadcasted_iota``; TPU forbids 1-D iota). Sharing the exact op
+    sequence is what makes the in-kernel schedule bit-identical to the
+    precomputed ``schedule_table`` oracle.
 
-    Returns (n_cols,) in [0, 1]. J_eff(t) = J * diag(s(t)) acting on the
-    source-spin axis; since J @ diag(s) @ q == J @ (s * q), callers apply it
-    as an elementwise scale on the quantized spin vector.
-
-    Works under jit/scan: ``step`` may be a traced int32 scalar.
+    step: int32 scalar (may be traced). col_ids: int32 array of column
+    indices, any shape; the result has ``col_ids.shape``.
     """
     C = dev.cols_per_tile
-    n = n_cols if n_cols is not None else dev.n_spins
     step = jnp.asarray(step, dtype=jnp.int32)
     slot = step // dev.substeps
 
-    j = jnp.arange(n, dtype=jnp.int32) % C          # column phase within tile
+    j = col_ids % C                                 # column phase within tile
     d = jnp.mod(slot - j, C)                        # slots since last selection
     last_sel = slot - d                             # may be < 0 before 1st pass
     # Pre-anneal load pass: column j programmed at virtual slot j - C.
@@ -85,22 +86,49 @@ def column_scales(step, dev: DeviceModel, pert: PerturbationConfig,
         rails_off = (jnp.mod(last_sel, pert.period_slots) < pert.off_slots)
         rails_off = rails_off & (~pre) & (last_sel < settle_start)
     else:
-        rails_off = jnp.zeros((n,), dtype=bool)
+        rails_off = jnp.zeros(col_ids.shape, dtype=bool)
 
     # Leakage decay by age (in slots) since last programming.
     age_slots = (step.astype(dtype) / dev.substeps) - last_sel.astype(dtype)
     if dev.tau_leak_sweeps > 0 and math.isfinite(dev.tau_leak_sweeps):
         decay = jnp.exp(-age_slots / (C * dev.tau_leak_sweeps))
     else:
-        decay = jnp.ones((n,), dtype=dtype)
+        decay = jnp.ones(col_ids.shape, dtype=dtype)
     return jnp.where(rails_off, jnp.zeros((), dtype=dtype), decay).astype(dtype)
+
+
+def unit_scales(dev: DeviceModel, pert: PerturbationConfig) -> bool:
+    """True when the schedule is identically 1 for every step/column —
+    no DAC gating and no (finite) leakage. In that regime the anneal is pure
+    gradient descent and integer fast paths (int8 spins x int8 J on the MXU)
+    are exact. Drives the AnnealEngine's j_dtype auto-selection."""
+    no_leak = not (dev.tau_leak_sweeps > 0 and
+                   math.isfinite(dev.tau_leak_sweeps))
+    return (not pert.enabled) and no_leak
+
+
+def column_scales(step, dev: DeviceModel, pert: PerturbationConfig,
+                  n_cols: int | None = None, dtype=jnp.float32):
+    """Effective per-column coupling scale s_j at Euler step ``step``.
+
+    Returns (n_cols,) in [0, 1]. J_eff(t) = J * diag(s(t)) acting on the
+    source-spin axis; since J @ diag(s) @ q == J @ (s * q), callers apply it
+    as an elementwise scale on the quantized spin vector.
+
+    Works under jit/scan: ``step`` may be a traced int32 scalar.
+    """
+    n = n_cols if n_cols is not None else dev.n_spins
+    col_ids = jnp.arange(n, dtype=jnp.int32)
+    return scales_from_cols(step, col_ids, dev, pert, dtype=dtype)
 
 
 def schedule_table(dev: DeviceModel, pert: PerturbationConfig,
                    n_cols: int | None = None, dtype=jnp.float32):
     """Precompute s(t) for all steps -> (n_steps, n_cols). Small: the paper's
-    configuration is 960 x 64 floats. Used by the Pallas fast path so the
-    kernel streams one row per step instead of re-deriving the closed form."""
+    configuration is 960 x 64 floats. The Pallas fused kernel no longer
+    consumes this table (it evaluates ``scales_from_cols`` in-kernel, so VMEM
+    is independent of T); the table remains as the ORACLE the parity tests
+    check the in-kernel derivation against, and feeds ``fused_anneal_ref``."""
     import jax
     steps = jnp.arange(dev.n_steps, dtype=jnp.int32)
     fn = lambda t: column_scales(t, dev, pert, n_cols=n_cols, dtype=dtype)

@@ -1,32 +1,50 @@
-"""jit'd public wrappers around the Pallas kernels."""
+"""jit'd public wrappers around the Pallas kernels.
+
+``fused_anneal`` is the thin back-compat shim kept for existing callers;
+new code should go through ``repro.core.engine.AnnealEngine``, which owns
+path/block-size selection and the autotune cache.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.device_model import DeviceModel
 from ..core.hamiltonian import ising_energy
-from ..core.perturbation import PerturbationConfig, schedule_table
+from ..core.perturbation import PerturbationConfig
 from .ising_anneal import fused_anneal_kernel
 
 
 def fused_anneal(J, v0, dev: DeviceModel, pert: PerturbationConfig,
-                 interpret: bool | None = None, block_r: int | None = None):
-    """Full anneal via the fused VMEM kernel.
+                 interpret: bool | None = None, block_r: int | None = None,
+                 j_dtype: str = "float32"):
+    """Full anneal via the fused VMEM kernel (schedule derived in-kernel).
 
     Returns (v_final, sigma, energy) matching ``core.annealer.anneal``'s
     noise-free outputs. interpret defaults to True off-TPU.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n = J.shape[-1]
-    scales = schedule_table(dev, pert, n_cols=n)
+    if j_dtype == "int8":
+        # The jit'd kernel wrapper only sees traced values; guard the silent
+        # astype(int8) truncation/wraparound here, where J is concrete.
+        try:
+            Jn = np.asarray(J)
+        except Exception:
+            Jn = None
+        if Jn is not None and (np.any(Jn != np.round(Jn)) or
+                               np.any(np.abs(Jn) > 127)):
+            raise ValueError("j_dtype='int8' requires integer coupling "
+                             "levels in [-127, 127] (run DeviceModel."
+                             "quantize first)")
     kw = {}
     if block_r is not None:
         kw["block_r"] = block_r
-    v = fused_anneal_kernel(jnp.asarray(J, jnp.float32), jnp.asarray(v0, jnp.float32),
-                            scales, drive_dt=dev.drive_eff * dev.dt,
-                            vdd=dev.vdd, interpret=interpret, **kw)
+    v = fused_anneal_kernel(jnp.asarray(J, jnp.float32),
+                            jnp.asarray(v0, jnp.float32),
+                            dev=dev, pert=pert, j_dtype=j_dtype,
+                            interpret=interpret, **kw)
     Jf = jnp.asarray(J, jnp.float32)
-    sigma = jnp.where(v >= 0.5 * dev.vdd, 1.0, -1.0)
+    sigma = jnp.where(v >= dev.threshold, 1.0, -1.0)
     return v, sigma, ising_energy(Jf, sigma)

@@ -1,8 +1,11 @@
 """Pure-jnp oracle for the fused anneal kernel.
 
 Semantically identical to ``core.annealer.anneal`` (noise-free path) but
-consumes a precomputed schedule table so the Pallas kernel and the oracle
-share bit-identical column scales.
+consumes a precomputed ``schedule_table`` so the Pallas kernel's IN-KERNEL
+closed-form schedule derivation can be parity-checked against the
+table-based evaluation. Uses the same op grouping as the kernel and the
+scan path — drive_dt folded into the per-step scales BEFORE the matvec —
+so agreement is bit-exact, not merely approximate.
 """
 from __future__ import annotations
 
@@ -22,13 +25,16 @@ def fused_anneal_ref(J, v0, scales, drive_dt: float, vdd: float = 1.0):
     """
     J = jnp.asarray(J, jnp.float32)
     v0 = jnp.asarray(v0, jnp.float32)
-    scales = jnp.asarray(scales, jnp.float32)
+    # Constant-fold drive_dt into the schedule (loop-invariant); elementwise,
+    # so bit-identical to the kernel's per-step `scales * drive_dt`.
+    scales = jnp.asarray(scales, jnp.float32) * drive_dt
     thr = 0.5 * vdd
 
     def body(v, s):
         q = jnp.where(v >= thr, 1.0, -1.0).astype(jnp.float32)
         sq = q * s                                     # (P, R, N) * (N,)
-        dv = jnp.einsum("pij,prj->pri", J, sq) * drive_dt
+        dv = jnp.einsum("pij,prj->pri", J, sq,
+                        preferred_element_type=jnp.float32)
         return jnp.clip(v + dv, 0.0, vdd), None
 
     v, _ = jax.lax.scan(body, v0, scales)

@@ -30,7 +30,7 @@ from ..distributed.sharding import (batch_spec, cache_shardings,
 from ..models import build, cache_specs, input_specs
 from ..roofline.analysis import (HW, model_flops, roofline_report)
 from ..training.steps import TrainState, make_train_step
-from .mesh import make_production_mesh
+from .mesh import activate_mesh, make_production_mesh
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
@@ -75,7 +75,7 @@ def lower_cell(arch: str, shape_name: str, mesh):
     model = build(cfg)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         if shape.kind == "train":
             state_shapes = _state_shapes(cfg)
             st_sh = _state_shardings(mesh, cfg, state_shapes)
@@ -201,7 +201,7 @@ def run_ising_cell(shape_key: str, multi_pod: bool, save: bool = True,
     dev = DeviceModel(n_spins=n, compute_dtype="bfloat16")
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         from jax.sharding import PartitionSpec as PS
         bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         if layout == "spins":

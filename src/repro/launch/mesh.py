@@ -1,23 +1,41 @@
 """Production mesh builders. FUNCTIONS, not module constants — importing this
 module never touches jax device state (required so smoke tests see 1 CPU
-device while the dry-run sees 512 forced host devices)."""
+device while the dry-run sees 512 forced host devices).
+
+Also the home of the jax-version compat shims for mesh handling: newer jax
+has ``jax.sharding.AxisType`` + ``jax.set_mesh`` (ambient abstract mesh);
+jax 0.4.x spells activation ``with mesh:`` and has no axis types. Callers
+use ``activate_mesh(mesh)`` instead of ``jax.set_mesh(mesh)`` so both work.
+"""
 from __future__ import annotations
 
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:            # jax 0.4.x: no axis types, all auto
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips, TPU v5e-256) or 2x16x16 two-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(shape)))
 
 
 def make_host_mesh():
     """Whatever this host has (smoke tests / examples): (n, 1)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((n, 1), ("data", "model"), **_mesh_kwargs(2))
+
+
+def activate_mesh(mesh):
+    """Context manager making ``mesh`` ambient: ``jax.set_mesh`` on newer
+    jax, the legacy ``with mesh:`` context on 0.4.x."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh                      # Mesh is itself a context manager

@@ -15,7 +15,7 @@ import numpy as np
 from ..configs import get_config
 from ..data import SyntheticLM
 from ..models import build
-from .mesh import make_host_mesh
+from .mesh import activate_mesh, make_host_mesh
 
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int,
@@ -27,7 +27,7 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int,
     if model.decode_step is None:
         raise SystemExit(f"{arch} is encoder-only; no decode path")
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         params = model.init(jax.random.PRNGKey(seed))
         ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=prompt_len,
                          global_batch=batch)

@@ -25,12 +25,16 @@ from .mesh import make_host_mesh
 
 
 def solve(n_spins: int, density: float, problems: int, runs: int,
-          seed: int = 0, backend: str = "jnp", perturbation: bool = True):
+          seed: int = 0, backend: str = "auto", perturbation: bool = True,
+          autotune: bool = False):
     dev = DeviceModel(n_spins=n_spins)
-    machine = IsingMachine(device=dev, backend=backend)
+    machine = IsingMachine(device=dev, backend=backend, autotune=autotune)
     if not perturbation:
         machine = machine.gradient_descent_baseline()
     ps = problem_set(n_spins, density, problems, seed=seed)
+    plan = machine.engine.plan(problems, runs, n_spins)
+    print(f"[engine] path={plan.path} block_r={plan.block_r} "
+          f"j_dtype={plan.j_dtype} ({plan.reason})")
     t0 = time.time()
     out = machine.solve(ps.J, num_runs=runs, seed=seed + 1)
     wall = time.time() - t0
@@ -55,11 +59,18 @@ def main():
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--problems", type=int, default=4)
     ap.add_argument("--runs", type=int, default=256)
-    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--backend", choices=["jnp", "pallas", "auto"],
+                    default="auto",
+                    help="AnnealEngine path: jnp=scan, pallas=fused, "
+                         "auto=engine decides (cache/backend-aware)")
     ap.add_argument("--no-perturbation", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="benchmark block_r/path candidates for this "
+                         "workload and persist the winner")
     args = ap.parse_args()
     out = solve(args.spins, args.density, args.problems, args.runs,
-                backend=args.backend, perturbation=not args.no_perturbation)
+                backend=args.backend, perturbation=not args.no_perturbation,
+                autotune=args.autotune)
     print("best energies:", out["best_energy"])
     print("best known   :", out["best_known"])
     print("success rates:", np.round(out["success_rate"], 4))

@@ -26,7 +26,7 @@ from ..data import SyntheticLM, DataState
 from ..distributed import (StragglerDetector, param_shardings, batch_spec,
                            resilient_step)
 from ..training.steps import TrainState, init_train_state, make_train_step
-from .mesh import make_host_mesh
+from .mesh import activate_mesh, make_host_mesh
 
 log = logging.getLogger("repro.train")
 
@@ -44,7 +44,7 @@ def train(arch: str, steps: int, batch: int, seq: int, ckpt_dir: str,
     ckpt = Checkpointer(ckpt_dir)
     detector = StragglerDetector()
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         state = init_train_state(cfg, jax.random.PRNGKey(0))
         st_sh = jax.tree.map(
             lambda s: s.sharding if hasattr(s, "sharding") else None, state)

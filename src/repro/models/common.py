@@ -22,11 +22,24 @@ BATCH_AXES = ("pod", "data")   # global-batch shards over all data-like axes
 MODEL_AXIS = "model"
 
 
+def active_mesh():
+    """The ambient mesh, or None. Newer jax exposes it as
+    ``jax.sharding.get_abstract_mesh``; on 0.4.x the ``with mesh:`` context
+    lands in ``pxla.thread_resources``."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        return mesh if (mesh is not None and mesh.axis_names) else None
+    env = getattr(jax.interpreters.pxla, "thread_resources", None)
+    mesh = getattr(getattr(env, "env", None), "physical_mesh", None)
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
 def _active_axis_names():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return ()
-    return tuple(mesh.axis_names)
+    mesh = active_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
 
 
 def logical(*axes):

@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .common import act_fn, dense_init, split_keys
+from .common import act_fn, active_mesh, dense_init, split_keys
 
 
 def init_moe(key, d_model: int, d_ff: int, n_experts: int):
@@ -97,7 +97,7 @@ def _moe_compute(params, x, *, top_k: int, cap: int, act: str,
 
 
 def _moe_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = active_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         return None
     return mesh
@@ -152,6 +152,7 @@ def apply_moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
                 P(None, None, "model"),                # wg
                 P(None, "model", None))                # wo: F sliced
     out_specs = P(bax if bax else None, None, None)
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    from ..distributed.sharding import shard_map as compat_shard_map
+    fn = compat_shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
     return fn(x, params["router"], params["wi"], params["wg"], params["wo"])

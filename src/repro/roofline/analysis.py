@@ -76,13 +76,11 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
 
 
 def _cost(compiled) -> dict:
+    from .hlo_cost import xla_cost_analysis
     try:
-        ca = compiled.cost_analysis()
+        return xla_cost_analysis(compiled)
     except Exception:
         return {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    return dict(ca or {})
 
 
 def roofline_report(compiled, hw: HW = HW(), *, chips: int | None = None,

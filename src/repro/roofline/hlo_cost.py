@@ -358,3 +358,16 @@ class HloCostModel:
 
 def analyze(hlo_text: str) -> Cost:
     return HloCostModel(hlo_text).entry_cost()
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions.
+
+    Older jaxlib returns one properties dict; jaxlib >= 0.4.x returns a
+    list with one dict per partition (and newest versions are back to a
+    dict). Always returns a plain dict (empty if XLA reports nothing).
+    """
+    props = compiled.cost_analysis()
+    if isinstance(props, (list, tuple)):
+        props = props[0] if props else {}
+    return dict(props) if props else {}

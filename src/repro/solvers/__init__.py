@@ -1,6 +1,7 @@
 from .brute_force import brute_force_ground_state
 from .tabu import tabu_search, best_known
 from .sa import simulated_annealing
+from .sa_jax import simulated_annealing_jax
 
 __all__ = ["brute_force_ground_state", "tabu_search", "best_known",
-           "simulated_annealing"]
+           "simulated_annealing", "simulated_annealing_jax"]

@@ -1,0 +1,192 @@
+"""AnnealEngine: dispatch rules, in-kernel-schedule parity, int8 fast path,
+autotune cache, and the JAX SA baseline.
+
+Parity contract (see ENGINE.md): the fused kernel's in-kernel closed-form
+schedule must produce BIT-IDENTICAL spins vs the ``schedule_table``-based
+oracle in every mode; voltages are bit-exact for unit schedules and agree
+to ~1 ULP when the leak-decay ``exp`` is in play (XLA constant-folds the
+precomputed table's exp in a different context than the kernel's runtime
+exp). Everything runs in interpret mode on CPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AnnealEngine, DeviceModel, DEFAULT_PERTURBATION,
+                        EnginePlan, IsingMachine, NOMINAL,
+                        PerturbationConfig, schedule_table, unit_scales)
+from repro.core.lfsr import lfsr_voltage_inits
+from repro.kernels import fused_anneal_kernel, fused_anneal_ref
+from repro.problems import problem_set
+from repro.solvers import (brute_force_ground_state, simulated_annealing,
+                           simulated_annealing_jax)
+
+
+def _setup(n, p, r, seed=0, sweeps=0.5, tau=10.0):
+    dev = DeviceModel(n_spins=n, anneal_sweeps=sweeps, tau_leak_sweeps=tau)
+    ps = problem_set(n, 0.5, p, seed=seed)
+    J = np.asarray(dev.quantize(jnp.asarray(ps.J)))
+    v0 = np.stack([lfsr_voltage_inits(n, r, seed=seed + i) for i in range(p)])
+    return dev, J, v0
+
+
+# ---------------------------------------------------------------------------
+# In-kernel closed-form schedule vs schedule_table oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pert", [NOMINAL, DEFAULT_PERTURBATION],
+                         ids=["nominal", "perturbation"])
+@pytest.mark.parametrize("tau", [10.0, float("inf")],
+                         ids=["leak", "no-leak"])
+@pytest.mark.parametrize("n,p,r,block_r", [
+    (64, 1, 128, 128),     # paper chip, exact block
+    (48, 1, 64, 64),       # lane padding (48 < 128)
+    (100, 2, 40, 64),      # padded N AND R not a multiple of block_r
+    (64, 1, 96, 64),       # R not a multiple of block_r
+])
+def test_closed_form_schedule_parity(pert, tau, n, p, r, block_r):
+    dev, J, v0 = _setup(n, p, r, tau=tau, sweeps=1.0)
+    scales = schedule_table(dev, pert, n_cols=n)
+    v_ref = np.asarray(fused_anneal_ref(J, v0, scales,
+                                        dev.drive_eff * dev.dt, dev.vdd))
+    v_k = np.asarray(fused_anneal_kernel(J, v0, dev=dev, pert=pert,
+                                         block_r=block_r, interpret=True))
+    # Spins: bit-identical in every mode (the acceptance contract).
+    assert np.array_equal(v_k >= dev.threshold, v_ref >= dev.threshold)
+    if unit_scales(dev, pert):
+        # No exp in the schedule -> voltages bit-exact too.
+        assert np.array_equal(v_k, v_ref)
+    else:
+        np.testing.assert_allclose(v_k, v_ref, rtol=2e-6, atol=2e-6)
+
+
+def test_int8_fast_path_bit_exact():
+    """Unit schedule + integer J: int8 MXU path must equal f32 bitwise."""
+    dev, J, v0 = _setup(64, 2, 64, tau=float("inf"), sweeps=1.0)
+    v_f32 = np.asarray(fused_anneal_kernel(J, v0, dev=dev, pert=NOMINAL,
+                                           j_dtype="float32", interpret=True))
+    v_i8 = np.asarray(fused_anneal_kernel(J, v0, dev=dev, pert=NOMINAL,
+                                          j_dtype="int8", interpret=True))
+    assert np.array_equal(v_f32, v_i8)
+
+
+def test_int8_rejects_non_integer_levels():
+    from repro.kernels import ops
+    dev, J, v0 = _setup(32, 1, 8, tau=float("inf"))
+    with pytest.raises(ValueError, match="integer coupling"):
+        ops.fused_anneal(J + 0.5, v0, dev, NOMINAL, j_dtype="int8",
+                         interpret=True)
+
+
+def test_bf16_j_exact_for_unit_schedule():
+    dev, J, v0 = _setup(48, 1, 32, tau=float("inf"), sweeps=0.5)
+    v_f32 = np.asarray(fused_anneal_kernel(J, v0, dev=dev, pert=NOMINAL,
+                                           j_dtype="float32", interpret=True))
+    v_bf = np.asarray(fused_anneal_kernel(J, v0, dev=dev, pert=NOMINAL,
+                                          j_dtype="bfloat16", interpret=True))
+    # integer levels and power-of-two drive_dt are exact in bf16
+    assert np.array_equal(v_f32, v_bf)
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatch
+# ---------------------------------------------------------------------------
+def test_engine_auto_plan_cpu_is_scan(tmp_path):
+    eng = AnnealEngine(cache_path=str(tmp_path / "cache.json"))
+    plan = eng.plan(2, 128, 64)
+    assert isinstance(plan, EnginePlan)
+    assert plan.path == "scan" and plan.reason == "auto"
+    assert plan.interpret  # off-TPU
+
+
+def test_engine_feature_fallback_forces_scan(tmp_path):
+    eng = AnnealEngine(path="fused",
+                       cache_path=str(tmp_path / "cache.json"))
+    plan = eng.plan(1, 8, 16, needs_scan=True)
+    assert plan.path == "scan" and plan.reason.startswith("feature")
+    # and record_every actually yields a trajectory through the fused engine
+    dev, J, v0 = _setup(16, 1, 8)
+    eng = AnnealEngine(device=dev, path="fused",
+                       cache_path=str(tmp_path / "cache.json"))
+    res = eng.run(J, v0, record_every=2)
+    assert res.energy_traj is not None
+
+
+def test_engine_fused_matches_scan(tmp_path):
+    dev, J, v0 = _setup(64, 1, 64, sweeps=1.0)
+    scan_res = AnnealEngine(device=dev, path="scan",
+                            cache_path=str(tmp_path / "c.json")).run(J, v0)
+    fused_res = AnnealEngine(device=dev, path="fused",
+                             cache_path=str(tmp_path / "c.json")).run(J, v0)
+    assert np.array_equal(np.asarray(scan_res.sigma),
+                          np.asarray(fused_res.sigma))
+    np.testing.assert_allclose(np.asarray(scan_res.v_final),
+                               np.asarray(fused_res.v_final),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_int8_autoselect_gd_baseline(tmp_path):
+    dev = DeviceModel(n_spins=32, tau_leak_sweeps=float("inf"))
+    eng = AnnealEngine(device=dev, perturbation=NOMINAL,
+                       cache_path=str(tmp_path / "c.json"))
+    _, J, _ = _setup(32, 1, 8, tau=float("inf"))
+    plan = eng.plan(1, 8, 32, J=J)
+    assert plan.j_dtype == "int8"
+    # non-integer J falls back to float
+    plan_f = eng.plan(1, 8, 32, J=J + 0.25)
+    assert plan_f.j_dtype == "float32"
+
+
+def test_engine_autotune_cache_roundtrip(tmp_path):
+    cache = str(tmp_path / "autotune.json")
+    dev = DeviceModel(n_spins=32, anneal_sweeps=0.25)
+    eng = AnnealEngine(device=dev, cache_path=cache)
+    plan = eng.autotune(1, 32, 32, probe_sweeps=0.125,
+                        candidates=(16, 32))
+    assert plan.reason == "autotuned"
+    assert (tmp_path / "autotune.json").exists()
+    # a fresh engine picks the tuned plan straight from the cache
+    eng2 = AnnealEngine(device=dev, cache_path=cache)
+    plan2 = eng2.plan(1, 32, 32)
+    assert plan2.reason == "cache"
+    assert plan2.path == plan.path and plan2.block_r == plan.block_r
+
+
+def test_machine_backends_agree_via_engine():
+    ps = problem_set(48, 0.5, 1, seed=5)
+    a = IsingMachine(backend="jnp").solve(ps.J, num_runs=32, seed=3)
+    b = IsingMachine(backend="pallas").solve(ps.J, num_runs=32, seed=3)
+    assert np.array_equal(a.sigma, b.sigma)
+    np.testing.assert_allclose(a.energy, b.energy, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# JAX SA baseline
+# ---------------------------------------------------------------------------
+def test_sa_jax_matches_numpy_and_brute_force():
+    dev = DeviceModel()
+    ps = problem_set(16, 0.5, 2, seed=3)
+    for p in range(2):
+        J = np.asarray(dev.quantize(jnp.asarray(ps.J[p])))
+        e_np, _ = simulated_annealing(J, n_sweeps=150, n_restarts=32, seed=1)
+        e_jx, s_jx = simulated_annealing_jax(J, n_sweeps=150, n_restarts=32,
+                                             seed=1)
+        e_bf, _ = brute_force_ground_state(J)
+        assert e_np == e_jx == pytest.approx(e_bf)
+        # returned sigma actually attains the returned energy
+        f = J @ s_jx.astype(np.float64)
+        assert -0.5 * float(s_jx @ f) == pytest.approx(e_jx)
+
+
+def test_sa_jax_batched_problems():
+    dev = DeviceModel()
+    ps = problem_set(32, 0.5, 3, seed=9)
+    Jq = np.asarray(dev.quantize(jnp.asarray(ps.J)))
+    e_np = np.array([simulated_annealing(Jq[p], n_sweeps=300, n_restarts=64,
+                                         seed=p)[0] for p in range(3)])
+    e_jx, s_jx = simulated_annealing_jax(Jq, n_sweeps=300, n_restarts=64,
+                                         seed=0)
+    assert e_jx.shape == (3,) and s_jx.shape == (3, 32)
+    np.testing.assert_allclose(e_jx, e_np)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import (absorb_fields, fix_gauge, flip_deltas, ising_energy,
                         local_field, maxcut_to_ising, maxcut_value,

@@ -1,15 +1,19 @@
-"""Pallas fused-anneal kernel vs the pure-jnp oracle (interpret mode).
+"""Pallas fused-anneal kernel vs the pure-jnp schedule-table oracle
+(interpret mode).
 
-Shape/dtype sweep per the harness requirement; padding paths (N not a lane
-multiple, R not a block multiple) are covered explicitly.
+The kernel derives the perturbation/leakage schedule IN-KERNEL from the
+step index; the oracle consumes a precomputed ``schedule_table``. Voltages
+agree to ~1 ULP (bit-exact for unit schedules — the leak decay's `exp` can
+constant-fold differently between the two compile contexts), spins are
+bit-identical. Padding paths (N not a lane multiple, R not a block
+multiple) are covered explicitly; deeper parameterized parity lives in
+test_engine.py.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import DeviceModel, PerturbationConfig, NOMINAL, schedule_table
 from repro.core.annealer import anneal
@@ -26,6 +30,13 @@ def _setup(n, p, r, seed=0, sweeps=0.5):
     return dev, J, v0
 
 
+def _assert_parity(v_k, v_ref, vdd=1.0):
+    v_k, v_ref = np.asarray(v_k), np.asarray(v_ref)
+    np.testing.assert_allclose(v_k, v_ref, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(v_k >= 0.5 * vdd, v_ref >= 0.5 * vdd), \
+        "spins diverged between in-kernel and table schedules"
+
+
 @pytest.mark.parametrize("n,p,r", [
     (64, 1, 128),      # paper chip, exact block
     (64, 2, 130),      # run padding
@@ -38,10 +49,8 @@ def test_kernel_matches_ref(n, p, r):
     pert = PerturbationConfig()
     scales = schedule_table(dev, pert, n_cols=n)
     v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt, dev.vdd)
-    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
-                              vdd=dev.vdd, interpret=True)
-    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
-                               rtol=1e-5, atol=1e-5)
+    v_k = fused_anneal_kernel(J, v0, dev=dev, pert=pert, interpret=True)
+    _assert_parity(v_k, v_ref, dev.vdd)
 
 
 def test_kernel_matches_annealer_end_to_end():
@@ -60,34 +69,35 @@ def test_kernel_nominal_mode():
     dev, J, v0 = _setup(64, 1, 32, seed=9)
     scales = schedule_table(dev, NOMINAL)
     v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt)
-    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
-                              interpret=True)
-    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
-                               rtol=1e-5, atol=1e-5)
+    v_k = fused_anneal_kernel(J, v0, dev=dev, pert=NOMINAL, interpret=True)
+    _assert_parity(v_k, v_ref)
 
 
 @given(st.integers(0, 10_000))
 @settings(max_examples=5, deadline=None)
 def test_kernel_property_random_problems(seed):
     dev, J, v0 = _setup(32, 1, 16, seed=seed, sweeps=0.25)
-    scales = schedule_table(dev, PerturbationConfig(period_slots=24,
-                                                    off_slots=4,
-                                                    settle_sweeps=0.1))
+    pert = PerturbationConfig(period_slots=24, off_slots=4, settle_sweeps=0.1)
+    scales = schedule_table(dev, pert)
     v_ref = fused_anneal_ref(J, v0, scales, dev.drive_eff * dev.dt)
-    v_k = fused_anneal_kernel(J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
-                              interpret=True)
-    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref),
-                               rtol=1e-5, atol=1e-5)
+    v_k = fused_anneal_kernel(J, v0, dev=dev, pert=pert, interpret=True)
+    _assert_parity(v_k, v_ref)
     assert np.all(np.asarray(v_k) >= 0) and np.all(np.asarray(v_k) <= 1)
 
 
 def test_kernel_block_r_variants():
     dev, J, v0 = _setup(64, 1, 256, seed=2)
-    scales = schedule_table(dev, PerturbationConfig())
+    pert = PerturbationConfig()
     outs = []
     for block_r in (64, 128, 256):
         outs.append(np.asarray(fused_anneal_kernel(
-            J, v0, scales, drive_dt=dev.drive_eff * dev.dt,
-            block_r=block_r, interpret=True)))
+            J, v0, dev=dev, pert=pert, block_r=block_r, interpret=True)))
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
     np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6)
+
+
+def test_kernel_j_dtype_int8_rejects_nonunit_schedule():
+    dev, J, v0 = _setup(64, 1, 32)
+    with pytest.raises(ValueError):
+        fused_anneal_kernel(J, v0, dev=dev, pert=PerturbationConfig(),
+                            j_dtype="int8", interpret=True)

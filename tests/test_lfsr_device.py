@@ -3,7 +3,7 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import DeviceModel, lfsr64_states, lfsr_spin_inits, lfsr_voltage_inits
 
