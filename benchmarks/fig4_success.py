@@ -4,16 +4,17 @@ inherent-noise-only (the measured-chip baseline).
 
 Paper claim: perturbation improves SR by MORE THAN 1.7x over both baselines,
 and the inherent-noise chip matches the simulated GD baseline.
+
+All three variants run through the solver registry (``engine`` with
+``variant=``); the noise baseline now actually seeds the circuit-noise RNG
+(the legacy script requested noise but never passed a key, so it silently
+ran the noiseless dynamics).
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import IsingMachine
-from repro.problems import problem_set
-from repro.solvers import best_known
+from repro.api import ProblemSuite, best_known_energies, solve_suite
 
 from .common import record, csv_line
 
@@ -22,15 +23,17 @@ def run(full: bool = False):
     t0 = time.time()
     n_problems = 20 if full else 6
     n_runs = 1000 if full else 250
-    ps = problem_set(64, 0.5, n_problems, seed=404)
-    bk = best_known(ps.J, seed=7)
+    suite = ProblemSuite.random(64, 0.5, n_problems, seed=404)
+    bk = best_known_energies(suite, seed=7)
 
-    m = IsingMachine()
-    sr_pert = m.solve(ps.J, num_runs=n_runs, seed=11).success_rate(bk)
-    sr_gd = (m.gradient_descent_baseline()
-             .solve(ps.J, num_runs=n_runs, seed=11).success_rate(bk))
-    sr_noise = (m.inherent_noise_baseline()
-                .solve(ps.J, num_runs=n_runs, seed=11).success_rate(bk))
+    def sr(variant):
+        rep = solve_suite(suite, "engine", runs=n_runs, seed=11,
+                          oracle=False, variant=variant)
+        return rep.attach_oracle(bk).success_rate()
+
+    sr_pert = sr("perturbation")
+    sr_gd = sr("gd")
+    sr_noise = sr("noise")
 
     ratio_gd = sr_pert.mean() / max(sr_gd.mean(), 1e-9)
     ratio_noise = sr_pert.mean() / max(sr_noise.mean(), 1e-9)

@@ -1,6 +1,12 @@
 """Fig. 5 (top): 99% success rates across problem sizes (16..64) and
 densities (10%..90%) under landscape perturbation.
 
+The whole grid is ONE heterogeneous ``ProblemSuite``: all cells pad to the
+64-spin chip block (exactly how sub-64 instances embed on the real die),
+so the entire size x density sweep is a single engine dispatch instead of
+one per cell. Small-N best-knowns come from the oracle cache's exact
+brute-force tier automatically.
+
 Trends checked against the paper: SR decreases with problem size and
 increases with density.
 """
@@ -10,9 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import IsingMachine
-from repro.problems import paper_benchmark_suite
-from repro.solvers import best_known, brute_force_ground_state
+from repro.api import ProblemSuite, best_known_energies, solve_suite
 
 from .common import record, csv_line
 
@@ -23,17 +27,18 @@ def run(full: bool = False):
     densities = (0.1, 0.3, 0.5, 0.7, 0.9)
     per_cell = 20 if full else 4
     n_runs = 1000 if full else 200
-    suite = paper_benchmark_suite(sizes, densities, per_cell, seed=2026)
-    m = IsingMachine()
+    suite = ProblemSuite.grid(sizes, densities, per_cell, seed=2026)
+    bk = best_known_energies(suite, seed=5)
+    rep = solve_suite(suite, "engine", runs=n_runs, seed=17,
+                      oracle=False).attach_oracle(bk)
+    sr = rep.success_rate()
 
     grid = {}
-    for (n, d), ps in suite.items():
-        if n <= 20:
-            bk = np.array([brute_force_ground_state(J)[0] for J in ps.J])
-        else:
-            bk = best_known(ps.J, seed=5)
-        sr = m.solve(ps.J, num_runs=n_runs, seed=17).success_rate(bk)
-        grid[f"{n}_{int(d*100)}"] = float(sr.mean())
+    for n in sizes:
+        for d in densities:
+            cell = [sr[i] for i, p in enumerate(suite)
+                    if p.meta["size"] == n and p.meta["density"] == d]
+            grid[f"{n}_{int(d*100)}"] = float(np.mean(cell))
 
     # trends
     mean_by_size = {n: np.mean([grid[f"{n}_{int(d*100)}"] for d in densities])
@@ -47,15 +52,17 @@ def run(full: bool = False):
     density_trend_up = dens[-1] > dens[0]
 
     payload = {"grid": grid, "per_cell": per_cell, "runs": n_runs,
+               "dispatches": rep.dispatches,
                "mean_by_size": {str(k): float(v) for k, v in mean_by_size.items()},
                "mean_by_density": {str(k): float(v) for k, v in mean_by_density.items()},
                "size_trend_decreasing": bool(size_trend_down),
                "density_trend_increasing": bool(density_trend_up)}
     record("fig5_sr_density", payload)
-    us = (time.time() - t0) * 1e6 / (len(suite) * per_cell * n_runs)
+    us = (time.time() - t0) * 1e6 / (len(suite) * n_runs)
     print(csv_line(
         "fig5_sr_density", us,
         f"SR16={mean_by_size[16]:.3f};SR64={mean_by_size[64]:.3f};"
+        f"dispatches={rep.dispatches};"
         f"size_trend_down={size_trend_down};density_trend_up={density_trend_up}"))
     return payload
 

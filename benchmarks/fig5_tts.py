@@ -1,6 +1,6 @@
 """Fig. 5 (bottom): Time-to-Solution cumulative distribution for 64-node
 random problems; paper reports mean 1.56 ms and median 0.72 ms with
-tau = 3 us.
+tau = 3 us. The SR -> TTS pipeline comes straight off the SolveReport.
 """
 from __future__ import annotations
 
@@ -8,10 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core import IsingMachine
-from repro.metrics import paper_hw_constants, tts_distribution
-from repro.problems import problem_set
-from repro.solvers import best_known
+from repro.api import ProblemSuite, best_known_energies, solve_suite
 
 from .common import record, csv_line
 
@@ -20,18 +17,18 @@ def run(full: bool = False):
     t0 = time.time()
     n_problems = 100 if full else 12
     n_runs = 1000 if full else 250
-    ps = problem_set(64, 0.5, n_problems, seed=777)
-    bk = best_known(ps.J, seed=3)
-    m = IsingMachine()
-    sr = m.solve(ps.J, num_runs=n_runs, seed=23).success_rate(bk)
-    hw = paper_hw_constants()
-    dist = tts_distribution(sr, hw.anneal_s)
+    suite = ProblemSuite.random(64, 0.5, n_problems, seed=777)
+    bk = best_known_energies(suite, seed=3)
+    rep = solve_suite(suite, "engine", runs=n_runs, seed=23,
+                      oracle=False).attach_oracle(bk)
+    m = rep.metrics()
     payload = {
         "n_problems": n_problems, "n_runs": n_runs,
-        "tts_ms": (np.asarray(dist["tts"]) * 1e3).tolist(),
-        "mean_ms": dist["mean"] * 1e3,
-        "median_ms": dist["median"] * 1e3,
-        "solved_fraction": dist["solved_fraction"],
+        "tts_ms": (np.asarray(m["tts_s"]) * 1e3).tolist(),
+        "mean_ms": m["mean_tts_s"] * 1e3,
+        "median_ms": m["median_tts_s"] * 1e3,
+        "solved_fraction": m["solved_fraction"],
+        "dispatches": rep.dispatches,
         "paper_mean_ms": 1.56, "paper_median_ms": 0.72,
     }
     record("fig5_tts", payload)
@@ -39,7 +36,7 @@ def run(full: bool = False):
     print(csv_line("fig5_tts", us,
                    f"median={payload['median_ms']:.2f}ms(paper 0.72);"
                    f"mean={payload['mean_ms']:.2f}ms(paper 1.56);"
-                   f"solved={dist['solved_fraction']:.2f}"))
+                   f"solved={payload['solved_fraction']:.2f}"))
     return payload
 
 

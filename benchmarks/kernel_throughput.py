@@ -16,9 +16,6 @@ from every run. One chip-die equivalent = 1/(3 us) ~ 333k anneals/s.
 """
 from __future__ import annotations
 
-import json
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,10 +26,7 @@ from repro.core.lfsr import lfsr_voltage_inits
 from repro.problems import problem_set
 from repro.solvers import simulated_annealing, simulated_annealing_jax
 
-from .common import record, csv_line
-
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
-                          "BENCH_kernel.json")
+from .common import csv_line, record, write_root_bench
 
 
 def run(full: bool = False):
@@ -82,8 +76,7 @@ def run(full: bool = False):
                  if not on_tpu else "fused compiled on TPU"),
     }
     record("kernel_throughput", payload)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    write_root_bench("BENCH_kernel.json", payload)
     print(csv_line("kernel_throughput", t_scan * 1e6 / anneals,
                    f"scan={anneals/t_scan:.0f}anneals/s;"
                    f"fused={anneals/t_fused:.0f}anneals/s;"

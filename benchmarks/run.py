@@ -1,9 +1,12 @@
 """Benchmark orchestrator — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4_success]
+    PYTHONPATH=src python -m benchmarks.run --quick   # solver-matrix smoke
 
 Prints ``name,us_per_call,derived`` CSV per benchmark; JSON artifacts land
-in experiments/bench/.
+in experiments/bench/. ``--quick`` runs only the registry solver-matrix
+smoke (every registered solver on one shared suite), writing
+``BENCH_solvers.json`` at the repo root for CI to archive.
 """
 from __future__ import annotations
 
@@ -12,7 +15,7 @@ import sys
 import traceback
 
 from . import (fig4_success, fig4_trajectories, fig5_sr_density, fig5_tts,
-               kernel_throughput, roofline_bench, table2_ets)
+               kernel_throughput, roofline_bench, solver_matrix, table2_ets)
 
 ALL = {
     "fig4_trajectories": fig4_trajectories.run,
@@ -22,6 +25,7 @@ ALL = {
     "table2_ets": table2_ets.run,
     "kernel_throughput": kernel_throughput.run,
     "roofline_bench": roofline_bench.run,
+    "solver_matrix": solver_matrix.run,
 }
 
 
@@ -29,9 +33,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale problem counts (hours on CPU)")
+    ap.add_argument("--quick", action="store_true",
+                    help="solver-matrix smoke only (CI job)")
     ap.add_argument("--only", nargs="*", choices=list(ALL))
     args = ap.parse_args()
-    names = args.only or list(ALL)
+    names = args.only or (["solver_matrix"] if args.quick else list(ALL))
     print("name,us_per_call,derived")
     failures = []
     for name in names:

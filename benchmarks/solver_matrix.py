@@ -1,0 +1,64 @@
+"""Solver-matrix smoke: every registered solver on one shared mixed-size
+suite, through the registry. Produces per-solver anneals/s + success rate
+in ``experiments/bench/solver_matrix.json`` AND ``BENCH_solvers.json`` at
+the repo root (next to BENCH_kernel.json) so CI archives the solver-level
+perf trajectory from every run.
+
+Solvers whose caps can't take the whole suite (brute-force: N <= 24) are
+scored on the subset they support (noted in the payload).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api import (ProblemSuite, best_known_energies, get_solver,
+                       list_solvers)
+
+from .common import csv_line, record, write_root_bench
+
+
+def run(full: bool = False):
+    t0 = time.time()
+    sizes = (16, 32, 64) if full else (16, 32)
+    per_size, runs = (4, 256) if full else (2, 32)
+    suite = ProblemSuite.grid(sizes=sizes, densities=(0.5,),
+                              problems_per_cell=per_size, seed=515)
+    bk = best_known_energies(suite, seed=2)
+
+    results = {}
+    for name, caps in list_solvers().items():
+        sub, sub_bk = suite, bk
+        if caps.max_n is not None:
+            keep = [i for i, n in enumerate(suite.sizes) if n <= caps.max_n]
+            sub = ProblemSuite([suite[i] for i in keep])
+            sub_bk = bk[keep]
+        rep = get_solver(name).solve(sub, runs=runs, seed=11)
+        rep.attach_oracle(rep.best_energy if caps.exact else sub_bk)
+        m = rep.metrics()
+        results[name] = {
+            "anneals_per_s": float(rep.anneals_per_s),
+            "success_rate": float(m["mean_success_rate"]),
+            "wall_s": float(rep.wall_s),
+            "dispatches": int(rep.dispatches),
+            "num_problems": rep.num_problems,
+            "runs": int(rep.runs),
+            "device": caps.device,
+            "subset_max_n": caps.max_n,
+        }
+
+    payload = {"sizes": list(sizes), "per_size": per_size, "runs": runs,
+               "suite_dispatch_buckets": suite.num_dispatches(),
+               "solvers": results,
+               "wall_time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    record("solver_matrix", payload)
+    write_root_bench("BENCH_solvers.json", payload)
+
+    us = (time.time() - t0) * 1e6 / max(len(suite) * runs, 1)
+    derived = ";".join(f"{k}={v['anneals_per_s']:.0f}/s,sr={v['success_rate']:.2f}"
+                       for k, v in results.items())
+    print(csv_line("solver_matrix", us, derived))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

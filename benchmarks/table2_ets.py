@@ -5,20 +5,16 @@ Two things are validated:
   1. the metric pipeline reproduces the paper's own arithmetic —
      ETS = P * TTS and normalized ETS = ETS / (log2(31) * 64*63/2),
      i.e. 22.76 uJ -> 2.28 nJ/edge-bit;
-  2. our simulated median TTS lands in the paper's order of magnitude.
+  2. our simulated median TTS (off the SolveReport metrics pipeline) lands
+     in the paper's order of magnitude.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import IsingMachine
+from repro.api import ProblemSuite, best_known_energies, solve_suite
 from repro.metrics import (energy_to_solution, normalized_ets,
-                           paper_hw_constants, time_to_solution,
-                           tts_distribution)
-from repro.problems import problem_set
-from repro.solvers import best_known
+                           paper_hw_constants)
 
 from .common import record, csv_line
 
@@ -35,15 +31,15 @@ def run(full: bool = False):
     arithmetic_ok = (abs(paper_ets * 1e6 - 22.752) < 0.1 and
                      abs(paper_norm * 1e9 - 2.28) < 0.03)
 
-    # 2) simulated TTS -> ETS
+    # 2) simulated TTS -> ETS through the report pipeline
     n_problems = 50 if full else 10
     n_runs = 1000 if full else 250
-    ps = problem_set(64, 0.5, n_problems, seed=999)
-    bk = best_known(ps.J, seed=13)
-    m = IsingMachine()
-    sr = m.solve(ps.J, num_runs=n_runs, seed=29).success_rate(bk)
-    dist = tts_distribution(sr, hw.anneal_s)
-    sim_ets = energy_to_solution(hw.power_w, dist["median"])
+    suite = ProblemSuite.random(64, 0.5, n_problems, seed=999)
+    bk = best_known_energies(suite, seed=13)
+    rep = solve_suite(suite, "engine", runs=n_runs, seed=29,
+                      oracle=False).attach_oracle(bk)
+    m = rep.metrics()
+    sim_ets = energy_to_solution(hw.power_w, m["median_tts_s"])
     sim_norm = normalized_ets(sim_ets, hw.coeff_levels, hw.n_spins,
                               hw.interactions)
 
@@ -52,7 +48,7 @@ def run(full: bool = False):
                   "normalized_ets_nJ": float(paper_norm * 1e9),
                   "reported_ets_uJ": 22.76, "reported_norm_nJ": 2.28,
                   "arithmetic_ok": bool(arithmetic_ok)},
-        "simulated": {"median_tts_ms": dist["median"] * 1e3,
+        "simulated": {"median_tts_ms": m["median_tts_s"] * 1e3,
                       "ets_uJ": float(sim_ets * 1e6),
                       "normalized_ets_nJ": float(sim_norm * 1e9),
                       "n_problems": n_problems, "n_runs": n_runs},
@@ -63,7 +59,7 @@ def run(full: bool = False):
         "table2_ets", us,
         f"arith={'OK' if arithmetic_ok else 'BAD'};"
         f"paper_norm={paper_norm*1e9:.2f}nJ;"
-        f"sim_median_tts={dist['median']*1e3:.2f}ms;"
+        f"sim_median_tts={m['median_tts_s']*1e3:.2f}ms;"
         f"sim_norm={sim_norm*1e9:.2f}nJ"))
     return payload
 

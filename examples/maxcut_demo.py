@@ -1,30 +1,29 @@
-"""Max-Cut on the Ising machine (paper Eq. 2 mapping), validated against
-brute force on a small graph and tabu on a 64-node graph.
+"""Max-Cut on the Ising machine (paper Eq. 2 mapping) through the typed
+API, validated against brute force on a small graph and tabu on a 64-node
+graph.
 
     PYTHONPATH=src python examples/maxcut_demo.py
 """
 import numpy as np
 
-from repro.core import IsingMachine, maxcut_value
-from repro.problems import maxcut_problem
-from repro.solvers import brute_force_ground_state, tabu_search
+from repro.api import Problem, solve_suite
+from repro.core import maxcut_value
 
 # -- small graph: exact check ------------------------------------------------
-W, J = maxcut_problem(n=16, density=0.5, seed=3)
-machine = IsingMachine(backend="auto")     # AnnealEngine picks the path
-out = machine.solve(J, num_runs=200, seed=1)
-best_cut_im = float(maxcut_value(W, out.best_sigma[0]))
-_, s_exact = brute_force_ground_state(J)
-best_cut_exact = float(maxcut_value(W, s_exact))
+p16 = Problem.maxcut(n=16, density=0.5, seed=3)
+out = solve_suite(p16, solver="engine", runs=200, seed=1, oracle=False)
+best_cut_im = float(maxcut_value(p16.meta["W"], out.best_sigma[0]))
+exact = solve_suite(p16, solver="brute-force", oracle=False)
+best_cut_exact = float(maxcut_value(p16.meta["W"], exact.best_sigma[0]))
 print(f"16-node Max-Cut: Ising machine {best_cut_im:.0f} "
       f"vs exact {best_cut_exact:.0f}")
 assert best_cut_im >= 0.95 * best_cut_exact
 
-# -- chip-sized graph ----------------------------------------------------------
-W, J = maxcut_problem(n=64, density=0.5, seed=11)
-out = machine.solve(J, num_runs=500, seed=2)
-cut_im = float(maxcut_value(W, out.best_sigma[0]))
-_, s_tabu = tabu_search(J, seed=5)
-cut_tabu = float(maxcut_value(W, s_tabu))
+# -- chip-sized graph --------------------------------------------------------
+p64 = Problem.maxcut(n=64, density=0.5, seed=11)
+out = solve_suite(p64, solver="engine", runs=500, seed=2, oracle=False)
+cut_im = float(maxcut_value(p64.meta["W"], out.best_sigma[0]))
+tabu = solve_suite(p64, solver="tabu", runs=8, seed=5, oracle=False)
+cut_tabu = float(maxcut_value(p64.meta["W"], tabu.best_sigma[0]))
 print(f"64-node Max-Cut: Ising machine {cut_im:.0f} vs tabu {cut_tabu:.0f} "
       f"({100*cut_im/max(cut_tabu,1):.1f}%)")

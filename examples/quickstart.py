@@ -1,44 +1,42 @@
-"""Quickstart: solve a random QUBO on the Ising-machine digital twin and
-reproduce the paper's headline behaviour (landscape perturbation beats plain
-gradient descent).
+"""Quickstart: solve a random QUBO suite through the typed API and
+reproduce the paper's headline behaviour (landscape perturbation beats
+plain gradient descent).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import IsingMachine
-from repro.metrics import paper_hw_constants, time_to_solution
-from repro.problems import problem_set
-from repro.solvers import best_known
+from repro.api import ProblemSuite, best_known_energies, solve_suite
 
 N, PROBLEMS, RUNS = 64, 4, 300
 
 print(f"== {N}-spin all-to-all Ising machine (65nm CMOS digital twin) ==")
-ps = problem_set(N, density=0.5, num_problems=PROBLEMS, seed=42)
-bk = best_known(ps.J, seed=1)
+suite = ProblemSuite.random(N, density=0.5, num_problems=PROBLEMS, seed=42)
+bk = best_known_energies(suite, seed=1)     # disk-cached tabu oracle
 print("best-known energies (tabu oracle):", bk)
 
-# 'auto' lets the AnnealEngine pick the path (fused Pallas kernel on TPU,
-# lax.scan elsewhere) and the run-block size from its autotune cache.
-machine = IsingMachine(backend="auto")         # landscape perturbation ON
-plan = machine.engine.plan(PROBLEMS, RUNS, N)
-print(f"engine plan: path={plan.path} block_r={plan.block_r} "
-      f"j_dtype={plan.j_dtype} ({plan.reason})")
-out = machine.solve(ps.J, num_runs=RUNS, seed=7)
-sr = out.success_rate(bk)
-print(f"\nwith landscape perturbation: best={out.best_energy}")
+# 'engine' is the digital twin behind the AnnealEngine (fused Pallas kernel
+# on TPU, lax.scan elsewhere); solve_suite attaches the oracle so the
+# report's SR/TTS/ETS metrics are ready immediately.
+report = solve_suite(suite, solver="engine", runs=RUNS, seed=7,
+                     oracle=False).attach_oracle(bk)
+plan = report.meta["engine_plan"]
+print(f"engine plan: path={plan['path']} block_r={plan['block_r']} "
+      f"j_dtype={plan['j_dtype']} ({plan['reason']})")
+sr = report.success_rate()
+print(f"\nwith landscape perturbation: best={report.best_energy}")
 print(f"  success rates: {np.round(sr, 3)} (mean {sr.mean():.3f})")
 
-gd = machine.gradient_descent_baseline()       # the paper's dashed baseline
-out_gd = gd.solve(ps.J, num_runs=RUNS, seed=7)
-sr_gd = out_gd.success_rate(bk)
-print(f"\ngradient descent only:       best={out_gd.best_energy}")
+# the paper's dashed baseline: same chip, no perturbation schedule
+report_gd = solve_suite(suite, solver="engine", runs=RUNS, seed=7,
+                        oracle=False, variant="gd").attach_oracle(bk)
+sr_gd = report_gd.success_rate()
+print(f"\ngradient descent only:       best={report_gd.best_energy}")
 print(f"  success rates: {np.round(sr_gd, 3)} (mean {sr_gd.mean():.3f})")
 
 ratio = sr.mean() / max(sr_gd.mean(), 1e-9)
 print(f"\nperturbation SR improvement: {ratio:.2f}x (paper reports >1.7x)")
 
-hw = paper_hw_constants()
-tts = time_to_solution(sr, hw.anneal_s)
-print(f"TTS at the chip's 3us anneal: {np.round(tts*1e3, 3)} ms "
+m = report.metrics()
+print(f"TTS at the chip's 3us anneal: {np.round(m['tts_s']*1e3, 3)} ms "
       f"(paper median: 0.72 ms)")

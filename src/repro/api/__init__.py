@@ -1,0 +1,26 @@
+"""repro.api — the typed Problem / Suite / Solver / Report surface.
+
+    from repro.api import Problem, ProblemSuite, solve_suite
+
+    suite = ProblemSuite.random(n=64, density=0.5, num_problems=4, seed=42)
+    report = solve_suite(suite, solver="engine", runs=256, seed=7)
+    print(report.summary())          # SR / TTS / ETS vs the cached oracle
+
+See API.md for the full tour (bucketing semantics, solver registry,
+capability flags, oracle cache).
+"""
+from .problem import MAX_LEVEL, Problem
+from .suite import CHIP_BLOCK, Bucket, ProblemSuite, padded_size
+from .report import SolveReport
+from .oracle import (best_known_energies, cache_path as oracle_cache_path,
+                     reconcile_best_known)
+from .registry import (Solver, SolverCaps, as_suite, get_solver,
+                       list_solvers, register_solver, solve_suite)
+
+__all__ = [
+    "MAX_LEVEL", "Problem", "CHIP_BLOCK", "Bucket", "ProblemSuite",
+    "padded_size", "SolveReport", "best_known_energies", "oracle_cache_path",
+    "reconcile_best_known",
+    "Solver", "SolverCaps", "as_suite", "get_solver", "list_solvers",
+    "register_solver", "solve_suite",
+]

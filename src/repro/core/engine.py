@@ -33,7 +33,6 @@ search — set ``autotune=True`` or call ``autotune()`` directly.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
 from typing import Optional
@@ -42,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..utils import load_json_cache, store_json_cache
 from .annealer import anneal, AnnealResult
 from .device_model import DeviceModel
 from .perturbation import (PerturbationConfig, DEFAULT_PERTURBATION,
@@ -75,23 +75,9 @@ def _cache_path() -> str:
     return os.environ.get(_CACHE_ENV, _DEFAULT_CACHE)
 
 
-def _load_cache(path: str) -> dict:
-    try:
-        with open(path) as f:
-            return json.load(f)
-    except (OSError, ValueError):
-        return {}
-
-
-def _store_cache(path: str, cache: dict) -> None:
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(cache, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
-        pass    # cache is an optimization; never fail a solve over it
+# shared atomic best-effort JSON cache (also backs the oracle cache)
+_load_cache = load_json_cache
+_store_cache = store_json_cache
 
 
 class AnnealEngine:

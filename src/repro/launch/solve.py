@@ -1,85 +1,80 @@
 """Ising-solve driver — the paper's workload as a production service.
 
-    PYTHONPATH=src python -m repro.launch.solve --spins 64 --density 0.5 \
-        --problems 4 --runs 256
+    PYTHONPATH=src python -m repro.launch.solve --solver engine \
+        --spins 64 --density 0.5 --problems 4 --runs 256
 
-Shards problems x runs over the data axes of the active mesh and (for
-virtual chips > 64 spins) spin blocks over 'model'.
+Any registered solver (``--list-solvers``) runs behind the same
+Problem/Suite/Report surface; the best-known oracle is disk-cached by
+problem content hash (``--no-cache`` bypasses). For virtual chips > 64
+spins the engine path shards problems x runs over the active mesh exactly
+as before — the suite is bucketed into pad-to-64 device batches first.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from ..core import DeviceModel, DEFAULT_PERTURBATION, IsingMachine
-from ..metrics import (energy_to_solution, normalized_ets, paper_hw_constants,
-                       time_to_solution)
-from ..problems import problem_set
-from ..solvers import best_known
-from .mesh import make_host_mesh
+from ..api import ProblemSuite, get_solver, list_solvers, solve_suite
 
 
 def solve(n_spins: int, density: float, problems: int, runs: int,
-          seed: int = 0, backend: str = "auto", perturbation: bool = True,
-          autotune: bool = False):
-    dev = DeviceModel(n_spins=n_spins)
-    machine = IsingMachine(device=dev, backend=backend, autotune=autotune)
-    if not perturbation:
-        machine = machine.gradient_descent_baseline()
-    ps = problem_set(n_spins, density, problems, seed=seed)
-    plan = machine.engine.plan(problems, runs, n_spins)
-    print(f"[engine] path={plan.path} block_r={plan.block_r} "
-          f"j_dtype={plan.j_dtype} ({plan.reason})")
-    t0 = time.time()
-    out = machine.solve(ps.J, num_runs=runs, seed=seed + 1)
-    wall = time.time() - t0
-    bk = best_known(ps.J, seed=seed + 2)
-    sr = out.success_rate(bk)
-    hw = paper_hw_constants()
-    tts = time_to_solution(sr, hw.anneal_s)
-    ets = energy_to_solution(hw.power_w, tts)
-    return {
-        "best_energy": out.best_energy, "best_known": bk,
-        "success_rate": sr, "tts_s": tts, "ets_j": ets,
-        "normalized_ets_j": normalized_ets(ets, dev.n_levels, n_spins,
-                                           n_spins - 1),
-        "wall_s": wall,
-        "anneals_per_s": problems * runs / max(wall, 1e-9),
-    }
+          seed: int = 0, solver: str = "engine", backend: str = "auto",
+          perturbation: bool = True, autotune: bool = False,
+          budget: float | None = None, use_cache: bool = True):
+    """Solve one random-QUBO cell through the registry; returns the
+    oracle-attached :class:`repro.api.SolveReport`."""
+    suite = ProblemSuite.random(n_spins, density, problems, seed=seed)
+    opts = {}
+    if solver == "engine":
+        opts = dict(backend=backend, autotune=autotune,
+                    variant="perturbation" if perturbation else "gd")
+    return solve_suite(suite, solver=solver, runs=runs, seed=seed + 1,
+                       budget=budget, use_cache=use_cache, **opts)
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--solver", default="engine",
+                    help="registered solver name (see --list-solvers)")
+    ap.add_argument("--list-solvers", action="store_true",
+                    help="print the solver registry and exit")
     ap.add_argument("--spins", type=int, default=64)
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--problems", type=int, default=4)
     ap.add_argument("--runs", type=int, default=256)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="solver-relative effort multiplier (anneal length "
+                         "for engine, sweeps for SA, iterations for tabu)")
     ap.add_argument("--backend", choices=["jnp", "pallas", "auto"],
                     default="auto",
-                    help="AnnealEngine path: jnp=scan, pallas=fused, "
-                         "auto=engine decides (cache/backend-aware)")
-    ap.add_argument("--no-perturbation", action="store_true")
+                    help="[engine] AnnealEngine path: jnp=scan, "
+                         "pallas=fused, auto=engine decides")
+    ap.add_argument("--no-perturbation", action="store_true",
+                    help="[engine] gradient-descent baseline variant")
     ap.add_argument("--autotune", action="store_true",
-                    help="benchmark block_r/path candidates for this "
-                         "workload and persist the winner")
+                    help="[engine] benchmark block_r/path candidates for "
+                         "this workload and persist the winner")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the disk-backed best-known oracle cache")
     args = ap.parse_args()
-    out = solve(args.spins, args.density, args.problems, args.runs,
-                backend=args.backend, perturbation=not args.no_perturbation,
-                autotune=args.autotune)
-    print("best energies:", out["best_energy"])
-    print("best known   :", out["best_known"])
-    print("success rates:", np.round(out["success_rate"], 4))
-    with np.printoptions(precision=3):
-        print("TTS (ms)     :", out["tts_s"] * 1e3)
-        print("ETS (uJ)     :", out["ets_j"] * 1e6)
-        print("norm ETS (nJ):", out["normalized_ets_j"] * 1e9)
-    print(f"throughput: {out['anneals_per_s']:.0f} anneals/s "
-          f"(wall {out['wall_s']:.1f}s)")
+
+    if args.list_solvers:
+        for name, caps in list_solvers().items():
+            lim = f" N<={caps.max_n}" if caps.max_n else ""
+            print(f"{name:12s} device={caps.device:5s} "
+                  f"exact={caps.exact} needs_oracle={caps.needs_oracle}{lim}")
+        return
+
+    get_solver(args.solver)     # fail fast on unknown names
+    report = solve(args.spins, args.density, args.problems, args.runs,
+                   solver=args.solver, backend=args.backend,
+                   perturbation=not args.no_perturbation,
+                   autotune=args.autotune, budget=args.budget,
+                   use_cache=not args.no_cache)
+    plan = report.meta.get("engine_plan")
+    if plan:
+        print(f"[engine] path={plan['path']} block_r={plan['block_r']} "
+              f"j_dtype={plan['j_dtype']} ({plan['reason']})")
+    print(report.summary())
 
 
 if __name__ == "__main__":

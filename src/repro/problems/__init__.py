@@ -1,7 +1,20 @@
+"""Legacy problem generators (deprecated shims).
+
+New code should use the typed API instead:
+
+    from repro.api import Problem, ProblemSuite
+
+``problem_set`` / ``paper_benchmark_suite`` remain the canonical rng
+streams (``ProblemSuite.random`` / ``.grid`` wrap them, so instances — and
+the oracle-cache keys derived from them — are identical on both paths);
+``maxcut_problem`` / ``number_partitioning`` delegate to the ``Problem``
+constructors.
+"""
 from .random_qubo import (random_ising_problem, problem_set,
                           paper_benchmark_suite, ProblemSet)
 from .maxcut import random_maxcut, maxcut_problem
 from .partition import number_partitioning
 
 __all__ = ["random_ising_problem", "paper_benchmark_suite", "ProblemSet",
-           "random_maxcut", "maxcut_problem", "number_partitioning"]
+           "random_maxcut", "maxcut_problem", "number_partitioning",
+           "problem_set"]

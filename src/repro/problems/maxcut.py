@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.hamiltonian import maxcut_to_ising
-
 
 def random_maxcut(n: int, density: float, seed: int = 0,
                   weighted: bool = True, max_w: int = 15) -> np.ndarray:
@@ -23,6 +21,12 @@ def random_maxcut(n: int, density: float, seed: int = 0,
 
 
 def maxcut_problem(n: int, density: float, seed: int = 0, weighted: bool = True):
-    """Returns (W, J): the graph and its bias-free Ising coupling J = -W."""
-    W = random_maxcut(n, density, seed, weighted)
-    return W, maxcut_to_ising(W).astype(np.float32)
+    """Deprecated shim — prefer ``repro.api.Problem.maxcut``.
+
+    Returns (W, J): the graph and its bias-free Ising coupling J = -W,
+    now normalized through ``Problem`` (integer DAC levels stored, float32
+    materialized once — same values as before, single dtype convention).
+    """
+    from ..api import Problem
+    p = Problem.maxcut(n, density, seed, weighted)
+    return p.meta["W"], p.J

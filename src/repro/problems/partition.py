@@ -7,17 +7,16 @@ report the residue |sum a_i s_i| as the natural quality metric.
 """
 from __future__ import annotations
 
-import numpy as np
-
 
 def number_partitioning(values, max_level: int = 15):
-    """Returns (J, residue_fn). J scaled into the DAC range."""
-    a = np.asarray(values, dtype=np.float64)
-    J = -2.0 * np.outer(a, a)
-    np.fill_diagonal(J, 0.0)
-    scale = np.abs(J).max()
-    if scale > 0:
-        J = J / scale * max_level
-    def residue(sigma):
-        return np.abs((a * np.asarray(sigma, dtype=np.float64)).sum(axis=-1))
-    return J.astype(np.float32), residue
+    """Deprecated shim — prefer ``repro.api.Problem.partition``.
+
+    Returns (J, residue_fn). J is normalized through ``Problem``: integer
+    DAC levels (exact for integer inputs whose couplings fit +-max_level,
+    proportionally quantized otherwise — the chip's own resolution limit),
+    materialized to float32 once. Previously J was continuously rescaled to
+    the full +-max_level range and re-quantized downstream.
+    """
+    from ..api import Problem
+    p = Problem.partition(values, max_level)
+    return p.J, p.partition_residue

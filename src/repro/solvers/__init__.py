@@ -1,7 +1,8 @@
 from .brute_force import brute_force_ground_state
 from .tabu import tabu_search, best_known
 from .sa import simulated_annealing
-from .sa_jax import simulated_annealing_jax
+from .sa_jax import simulated_annealing_jax, simulated_annealing_jax_runs
 
 __all__ = ["brute_force_ground_state", "tabu_search", "best_known",
-           "simulated_annealing", "simulated_annealing_jax"]
+           "simulated_annealing", "simulated_annealing_jax",
+           "simulated_annealing_jax_runs"]

@@ -5,11 +5,13 @@ import numpy as np
 
 
 def simulated_annealing(J, n_sweeps: int = 200, n_restarts: int = 16,
-                        beta0: float = 0.05, beta1: float = 4.0, seed: int = 0):
+                        beta0: float = 0.05, beta1: float = 4.0, seed: int = 0,
+                        return_all: bool = False):
     """Metropolis single-flip SA, vectorized over restarts.
 
     Geometric inverse-temperature schedule beta0 -> beta1 over n_sweeps.
-    Returns (best_energy, best_sigma).
+    Returns (best_energy, best_sigma), or with ``return_all`` the
+    per-restart (energies (R,), sigmas (R, N)).
     """
     J = np.asarray(J, dtype=np.float64)
     n = J.shape[-1]
@@ -34,5 +36,7 @@ def simulated_annealing(J, n_sweeps: int = 200, n_restarts: int = 16,
         improved = e < best_e
         best_e = np.where(improved, e, best_e)
         best_s = np.where(improved[:, None], s, best_s)
+    if return_all:
+        return best_e, best_s.astype(np.int8)
     k = int(best_e.argmin())
     return float(best_e[k]), best_s[k].astype(np.int8)

@@ -69,12 +69,41 @@ def _sa_single(J, key, betas):
 def _sa_problem(J, key, n_sweeps: int, n_restarts: int,
                 beta0: float, beta1: float):
     """All restarts of one problem. Returns (best_e scalar, best_s (n,))."""
+    best_e, best_s = _sa_problem_all(J, key, n_sweeps, n_restarts,
+                                     beta0, beta1)
+    i = jnp.argmin(best_e)
+    return best_e[i], best_s[i]
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "n_restarts"))
+def _sa_problem_all(J, key, n_sweeps: int, n_restarts: int,
+                    beta0: float, beta1: float):
+    """All restarts of one problem, per-restart results: ((R,), (R, n))."""
     betas = beta0 * (beta1 / beta0) ** (jnp.arange(n_sweeps, dtype=jnp.float32)
                                         / max(n_sweeps - 1, 1))
     keys = jax.random.split(key, n_restarts)
-    best_e, best_s = jax.vmap(lambda k: _sa_single(J, k, betas))(keys)
-    i = jnp.argmin(best_e)
-    return best_e[i], best_s[i]
+    return jax.vmap(lambda k: _sa_single(J, k, betas))(keys)
+
+
+def simulated_annealing_jax_runs(J, n_runs: int = 16, n_sweeps: int = 200,
+                                 beta0: float = 0.05, beta1: float = 4.0,
+                                 seed: int = 0):
+    """Per-run SA energies for the SolveReport schema.
+
+    J: (P, n, n). Returns (energies (P, R) float64, sigma (P, R, n) int8) —
+    each restart reported as an independent run, same batching as the Ising
+    machine itself (problems and restarts vmapped on device).
+    """
+    J = jnp.asarray(J, jnp.float32)
+    if J.ndim == 2:
+        J = J[None]
+    P = J.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), P)
+    e, s = jax.vmap(
+        lambda Jp, kp: _sa_problem_all(Jp, kp, n_sweeps, n_runs,
+                                       beta0, beta1))(J, keys)
+    return (np.asarray(e, dtype=np.float64),
+            np.asarray(s).astype(np.int8))
 
 
 def simulated_annealing_jax(J, n_sweeps: int = 200, n_restarts: int = 16,

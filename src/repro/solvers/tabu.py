@@ -8,8 +8,11 @@ import numpy as np
 
 
 def tabu_search(J, n_iters: int | None = None, n_restarts: int = 8,
-                tenure: int | None = None, seed: int = 0):
-    """Minimize H = -0.5 s'Js. Returns (best_energy, best_sigma).
+                tenure: int | None = None, seed: int = 0,
+                return_all: bool = False):
+    """Minimize H = -0.5 s'Js. Returns (best_energy, best_sigma), or with
+    ``return_all`` the per-restart (energies (R,), sigmas (R, N)) so callers
+    can treat restarts as independent runs.
 
     Classic best-improvement tabu: flip the non-tabu spin with the lowest
     resulting energy (aspiration: tabu moves allowed if they beat the
@@ -22,8 +25,8 @@ def tabu_search(J, n_iters: int | None = None, n_restarts: int = 8,
     tenure = tenure if tenure is not None else max(4, n // 4)
     rng = np.random.default_rng(seed)
 
-    best_e_global = np.inf
-    best_s_global = None
+    all_e = np.empty(n_restarts, dtype=np.float64)
+    all_s = np.empty((n_restarts, n), dtype=np.int8)
     for r in range(n_restarts):
         s = rng.choice([-1.0, 1.0], size=n)
         f = J @ s
@@ -45,9 +48,12 @@ def tabu_search(J, n_iters: int | None = None, n_restarts: int = 8,
             tabu_until[k] = it + tenure
             if e < best_e - 1e-12:
                 best_e, best_s = e, s.copy()
-        if best_e < best_e_global:
-            best_e_global, best_s_global = best_e, best_s
-    return float(best_e_global), best_s_global.astype(np.int8)
+        all_e[r] = best_e
+        all_s[r] = best_s.astype(np.int8)
+    if return_all:
+        return all_e, all_s
+    k = int(all_e.argmin())
+    return float(all_e[k]), all_s[k]
 
 
 def best_known(J_batch, **kw) -> np.ndarray:

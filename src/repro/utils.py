@@ -1,0 +1,33 @@
+"""Shared small utilities.
+
+``load_json_cache`` / ``store_json_cache`` back both persistent caches in
+the repo — the AnnealEngine autotune cache (``core/engine.py``) and the
+best-known oracle cache (``api/oracle.py``). Loads tolerate missing or
+corrupt files; stores are atomic (tmp + rename) and best-effort — a cache
+is an optimization, so persistence failures never fail a solve.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load_json_cache(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def store_json_cache(path: str, cache: dict) -> None:
+    try:
+        parent = os.path.dirname(path)
+        if parent:                       # bare filenames have no dir to make
+            os.makedirs(parent, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass

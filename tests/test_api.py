@@ -1,0 +1,258 @@
+"""repro.api — Problem/Suite/Solver-registry/Report/oracle-cache contract."""
+import json
+
+import numpy as np
+import pytest
+
+import repro.api.oracle as oracle_mod
+from repro.api import (Problem, ProblemSuite, best_known_energies,
+                       get_solver, list_solvers, padded_size, solve_suite)
+
+
+# -- Problem ----------------------------------------------------------------
+
+def test_problem_levels_hash_and_materialization():
+    p = Problem.random_qubo(16, 0.5, seed=3)
+    assert p.levels.dtype == np.int16 and p.scale == 1.0
+    assert p.J.dtype == np.float32
+    np.testing.assert_array_equal(p.J, p.levels.astype(np.float32))
+    assert p.J is p.J                       # materialized once
+    # hash keys on content, not provenance
+    assert p.content_hash == Problem.from_couplings(p.J).content_hash
+    assert p.content_hash != Problem.random_qubo(16, 0.5, seed=4).content_hash
+
+
+def test_problem_asserts_device_level_range():
+    J = np.zeros((4, 4))
+    J[0, 1] = J[1, 0] = 99                  # beyond the 31-level DAC range
+    with pytest.raises(ValueError, match="31-level"):
+        Problem.from_couplings(J)
+    J[0, 1] = J[1, 0] = 0.5                 # continuous needs quantize=True
+    with pytest.raises(ValueError, match="quantize"):
+        Problem.from_couplings(J)
+    Jd = np.zeros((4, 4))
+    Jd[0, 1] = 3                            # directed: single-flip solvers'
+    with pytest.raises(ValueError, match="symmetric"):   # updates need J=J.T
+        Problem.from_couplings(Jd)
+    p = Problem.from_couplings(J, quantize=True)
+    assert np.abs(p.levels).max() <= 15 and p.scale > 0
+    np.testing.assert_allclose(p.J, J, atol=p.scale / 2)
+
+
+def test_legacy_generators_normalized_through_problem():
+    # dtype-drift fix: maxcut J is float32 *integer levels* now, and the
+    # legacy tuple functions return the same instances as the typed API.
+    from repro.problems import maxcut_problem, number_partitioning, problem_set
+    W, J = maxcut_problem(12, 0.5, seed=2)
+    assert J.dtype == np.float32
+    assert np.all(J == np.round(J)) and np.abs(J).max() <= 15
+    np.testing.assert_array_equal(J, -W)
+
+    ps = problem_set(12, 0.5, 2, seed=2)
+    suite = ProblemSuite.random(12, 0.5, 2, seed=2)
+    for i in range(2):
+        np.testing.assert_array_equal(ps.J[i], suite[i].J)
+
+    a = [2, 2, 1, 1, 1, 1]
+    Jp, residue = number_partitioning(a)
+    expect = -2.0 * np.outer(a, a)
+    np.fill_diagonal(expect, 0.0)
+    np.testing.assert_array_equal(Jp, expect)     # integer inputs: exact
+    assert residue(np.array([1, -1, 1, -1, 1, -1])) == 0
+
+
+# -- suite bucketing --------------------------------------------------------
+
+def test_padded_size_blocks():
+    assert padded_size(6) == 64 and padded_size(64) == 64
+    assert padded_size(65) == 128
+    assert padded_size(6, block=8) == 8 and padded_size(20, block=16) == 32
+
+
+def test_mixed_suite_buckets_and_dispatch_counter():
+    mixed = ProblemSuite([Problem.random_qubo(16, 0.5, 1),
+                          Problem.random_qubo(32, 0.5, 2),
+                          Problem.random_qubo(64, 0.5, 3)])
+    assert mixed.num_dispatches() == 1      # all pad to one 64-spin block
+    buckets = mixed.buckets()
+    assert len(buckets) == 1 and buckets[0].n_pad == 64
+    assert buckets[0].J.shape == (3, 64, 64)
+    # padding is zero outside the true problem
+    assert np.all(buckets[0].J[0, 16:, :] == 0)
+    assert np.all(buckets[0].J[0, :, 16:] == 0)
+    # finer blocks split as expected
+    assert mixed.num_dispatches(block=32) == 2
+
+    rep = get_solver("engine").solve(mixed, runs=16, seed=0)
+    assert rep.dispatches <= len(buckets)
+    # trimmed best_sigma reproduces the reported level-space energy
+    for i, p in enumerate(mixed):
+        s = rep.best_sigma[i].astype(np.float64)
+        assert s.shape == (p.n,)
+        e = -0.5 * s @ p.J_levels.astype(np.float64) @ s
+        assert np.isclose(e, rep.best_energy[i])
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_schema_uniform_across_solvers():
+    suite = ProblemSuite.random(16, 0.5, 2, seed=9)
+    schemas, reports = {}, {}
+    for name in list_solvers():
+        rep = get_solver(name).solve(suite, runs=8, seed=0, block=16)
+        reports[name] = rep
+        payload = rep.to_json()
+        json.dumps(payload)                 # serializable end to end
+        schemas[name] = set(payload)
+        assert rep.num_problems == 2
+        assert all(s.shape == (16,) for s in rep.best_sigma)
+        assert rep.dispatches >= 1 and rep.wall_s >= 0
+    assert len(set(map(frozenset, schemas.values()))) == 1, schemas
+    # exact solver's energies are ground truth for the others to meet
+    bf = reports["brute-force"].best_energy
+    assert np.all(reports["tabu"].best_energy >= bf - 1e-9)
+
+
+def test_engine_and_sa_jax_agree_with_oracle(tmp_path):
+    suite = ProblemSuite.random(16, 0.5, 1, seed=1)    # seeded easy instance
+    bk = best_known_energies(suite, path=str(tmp_path / "o.json"))
+    rep_e = solve_suite(suite, "engine", runs=128, seed=3,
+                        oracle=False).attach_oracle(bk)
+    rep_s = solve_suite(suite, "sa-jax", runs=32, seed=3, oracle=False,
+                        block=16).attach_oracle(bk)
+    np.testing.assert_allclose(rep_e.best_energy, bk)
+    np.testing.assert_allclose(rep_s.best_energy, bk)
+    assert rep_e.success_rate()[0] > 0
+
+
+def test_partition_reaches_analytic_constant_via_every_solver():
+    a = [2, 2, 1, 1, 1, 1]                 # perfectly partitionable
+    p = Problem.partition(a)
+    assert p.scale == 1.0                  # integer couplings stored exactly
+    target = -float(np.sum(np.square(a)))  # H = -sum a_i^2 at a perfect split
+    for name in list_solvers():
+        rep = get_solver(name).solve(ProblemSuite([p]), runs=64, seed=1,
+                                     block=8)
+        assert np.isclose(rep.best_energy[0], target), (name, rep.best_energy)
+        assert p.partition_residue(rep.best_sigma[0]) == 0, name
+
+
+# -- report -----------------------------------------------------------------
+
+def test_report_merge_and_metrics():
+    s1 = ProblemSuite.random(14, 0.5, 1, seed=1)
+    s2 = ProblemSuite.random(14, 0.5, 1, seed=2)
+    r1 = get_solver("sa-numpy").solve(s1, runs=8, seed=0)
+    r2 = get_solver("sa-numpy").solve(s2, runs=8, seed=0)
+    merged = r1.merge(r2)
+    assert merged.num_problems == 2
+    assert merged.problem_hashes == s1.hashes + s2.hashes
+    merged.attach_oracle(np.concatenate([
+        best_known_energies(s1, use_cache=False),
+        best_known_energies(s2, use_cache=False)]))
+    m = merged.metrics()
+    assert m["success_rate"].shape == (2,)
+    assert np.all(m["tts_s"] >= 3e-6 - 1e-12)     # floored at one anneal
+    with pytest.raises(ValueError):
+        r1.merge(get_solver("tabu").solve(s2, runs=2, seed=0))
+
+
+# -- oracle cache -----------------------------------------------------------
+
+def test_oracle_cache_roundtrip(tmp_path, monkeypatch):
+    path = str(tmp_path / "oracle.json")
+    suite = ProblemSuite.random(14, 0.5, 2, seed=5)
+    bk = best_known_energies(suite, path=path)
+    assert (tmp_path / "oracle.json").exists()
+    entries = json.load(open(path))
+    assert set(entries) == set(suite.hashes)
+    assert all(e["method"] == "brute_force" for e in entries.values())  # n<=20
+
+    # second call must be pure cache hits
+    def boom(*a, **k):
+        raise AssertionError("oracle recomputed despite cache hit")
+    with monkeypatch.context() as mp:
+        mp.setattr(oracle_mod, "_compute", boom)
+        np.testing.assert_array_equal(
+            best_known_energies(suite, path=path), bk)
+        # the --no-cache escape hatch really bypasses the cache
+        with pytest.raises(AssertionError):
+            best_known_energies(suite, path=path, use_cache=False)
+    # refresh recomputes but matches (deterministic brute force)
+    np.testing.assert_array_equal(
+        best_known_energies(suite, path=path, refresh=True), bk)
+
+
+def test_solve_suite_oracle_attachment(tmp_path):
+    suite = ProblemSuite.random(14, 0.5, 1, seed=8)
+    rep = solve_suite(suite, "sa-numpy", runs=8, seed=0,
+                      oracle_path=str(tmp_path / "o.json"))
+    assert rep.best_known is not None
+    rep_bf = solve_suite(suite, "brute-force",
+                         oracle_path=str(tmp_path / "o.json"))
+    # exact solver is its own oracle
+    np.testing.assert_array_equal(rep_bf.best_known, rep_bf.best_energy)
+
+
+def test_problem_is_pytree_transformable():
+    import jax
+    p = Problem.random_qubo(8, 0.5, seed=1)
+    # structural transforms must survive validation (tracers under jit,
+    # out-of-range values under tree_map)
+    total = jax.jit(lambda q: q.levels.sum())(p)
+    assert int(total) == int(p.levels.sum())
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, p)
+    np.testing.assert_array_equal(np.asarray(doubled.levels), p.levels * 2)
+    assert doubled.kind == p.kind and doubled.meta is p.meta
+
+
+def test_oracle_store_handles_bare_filename(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    suite = ProblemSuite.random(10, 0.5, 1, seed=3)
+    best_known_energies(suite, path="oc.json")      # no directory component
+    assert (tmp_path / "oc.json").exists()
+
+
+def test_reconcile_upgrades_stale_oracle(tmp_path):
+    path = str(tmp_path / "oracle.json")
+    suite = ProblemSuite.random(12, 0.5, 1, seed=6)
+    bk = best_known_energies(suite, path=path)      # exact (brute force)
+    # poison the cache with a stale, weaker entry
+    stale = json.load(open(path))
+    stale[suite[0].content_hash]["energy"] = float(bk[0]) + 50.0
+    json.dump(stale, open(path, "w"))
+    rep = solve_suite(suite, "sa-numpy", runs=16, seed=0, oracle_path=path)
+    # the solve beat the stale entry: scored against its own better energy...
+    assert rep.best_known[0] <= rep.best_energy[0] + 1e-9
+    # ...and the improvement was persisted back to the cache
+    assert json.load(open(path))[suite[0].content_hash]["energy"] \
+        <= rep.best_energy[0] + 1e-9
+
+
+def test_self_oracle_solvers_skip_external_oracle(tmp_path, monkeypatch):
+    # tabu / brute-force are their own oracle: solve_suite must not run the
+    # oracle solver a second time
+    def boom(*a, **k):
+        raise AssertionError("external oracle ran for a self-oracle solver")
+    with monkeypatch.context() as mp:
+        mp.setattr(oracle_mod, "_compute", boom)
+        suite = ProblemSuite.random(12, 0.5, 1, seed=7)
+        rep = solve_suite(suite, "tabu", runs=8, seed=0,
+                          oracle_path=str(tmp_path / "o.json"))
+        np.testing.assert_array_equal(rep.best_known, rep.best_energy)
+
+
+# -- per-run solver extensions ----------------------------------------------
+
+def test_return_all_backcompat():
+    from repro.solvers import simulated_annealing, tabu_search
+    J = Problem.random_qubo(12, 0.6, seed=4).J_levels
+    e_best, s_best = tabu_search(J, seed=1)
+    e_all, s_all = tabu_search(J, seed=1, return_all=True)
+    assert e_all.shape == (8,) and s_all.shape == (8, 12)
+    assert np.isclose(e_all.min(), e_best)
+    e_best, _ = simulated_annealing(J, n_sweeps=40, n_restarts=6, seed=2)
+    e_all, s_all = simulated_annealing(J, n_sweeps=40, n_restarts=6, seed=2,
+                                       return_all=True)
+    assert e_all.shape == (6,) and s_all.shape == (6, 12)
+    assert np.isclose(e_all.min(), e_best)
