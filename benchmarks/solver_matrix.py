@@ -4,8 +4,12 @@ in ``experiments/bench/solver_matrix.json`` AND ``BENCH_solvers.json`` at
 the repo root (next to BENCH_kernel.json) so CI archives the solver-level
 perf trajectory from every run.
 
-Solvers whose caps can't take the whole suite (brute-force: N <= 24) are
-scored on the subset they support (noted in the payload).
+Solvers whose caps can't take the whole suite (brute-force: N <= 24,
+engine: one 64-spin die) are scored on the subset they support (noted in
+the payload). The suite mixes the paper's random-QUBO grid with two
+encoded zoo workloads (MIS + graph coloring, ``repro.workloads``) so every
+solver is exercised on structured penalty landscapes, not just random
+couplings — the encodings ride the same ``Problem`` surface for free.
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ def run(full: bool = False):
     per_size, runs = (4, 256) if full else (2, 32)
     suite = ProblemSuite.grid(sizes=sizes, densities=(0.5,),
                               problems_per_cell=per_size, seed=515)
+    suite = suite + ProblemSuite.workload("mis", size=10, seed=515) \
+        + ProblemSuite.workload("coloring", size=5, seed=515)
     bk = best_known_energies(suite, seed=2)
 
     results = {}

@@ -1,0 +1,108 @@
+"""Workload-zoo benchmark: encode → solve → decode → verify over every
+registered NP-hard workload, plus a multi-chip decomposition row.
+
+For each zoo workload (coloring / mis / vertex-cover / 3sat / tsp) a small
+suite of random instances is solved by each capable registered solver; we
+record the feasibility rate of the decoded best solutions, the mean native
+objective, and whether the exact affine energy identity held
+(``model_value == (E + offset)/4`` — it must, bit-for-bit). The
+decomposition row solves a beyond-one-die Max-Cut with ``chip-lns`` and
+scores it against the tabu oracle.
+
+Writes ``experiments/bench/workloads.json`` AND ``BENCH_workloads.json`` at
+the repo root so CI archives the workload-coverage trajectory every run.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.api import Problem, ProblemSuite, get_solver, list_solvers
+from repro.workloads import WORKLOADS, model_energy, spins_to_bits
+
+from .common import csv_line, record, write_root_bench
+
+#: native instance sizes (nodes / variables / cities), chosen so every
+#: encoding fits N <= 24 and brute-force stays available as ground truth.
+_SIZES = {"mis": 10, "vertex-cover": 10, "coloring": 5, "3sat": 5, "tsp": 4}
+
+
+def _solve_zoo(full: bool):
+    per, runs = (4, 128) if full else (2, 32)
+    solvers = ("tabu", "engine", "brute-force") + \
+        (("sa-jax", "chip-lns") if full else ())
+    out = {}
+    for name, wl in sorted(WORKLOADS.items()):
+        suite = ProblemSuite.workload(name, size=_SIZES[name],
+                                      num_problems=per, seed=99)
+        big = max(suite.sizes)
+        row = {"size": _SIZES[name], "spins": list(suite.sizes),
+               "sense": wl.sense, "solvers": {}}
+        for sname in solvers:
+            caps = list_solvers()[sname]
+            if caps.max_n is not None and big > caps.max_n:
+                continue
+            rep = get_solver(sname).solve(suite, runs=runs, seed=7)
+            feas, objs, exact = [], [], True
+            for i, p in enumerate(suite):
+                res = wl.verify(p, wl.decode(p, rep.best_sigma[i]))
+                feas.append(res.feasible)
+                objs.append(res.objective)
+                mv = wl.model_value(p, spins_to_bits(rep.best_sigma[i]))
+                exact &= (mv == model_energy(p, rep.best_sigma[i]))
+            row["solvers"][sname] = {
+                "feasible_fraction": sum(feas) / len(feas),
+                "mean_objective": sum(objs) / len(objs),
+                "energy_identity_exact": bool(exact),
+                "anneals_per_s": float(rep.anneals_per_s),
+                "wall_s": float(rep.wall_s),
+            }
+        out[name] = row
+    return out
+
+
+def _solve_decomposition(full: bool):
+    n = 128 if full else 96
+    p = Problem.maxcut(n, 0.3, seed=3)
+    t0 = time.time()
+    rep = get_solver("chip-lns").solve(ProblemSuite([p]),
+                                       runs=16 if full else 8, seed=7,
+                                       budget=2.0)
+    from repro.solvers.tabu import tabu_search
+    bk, _ = tabu_search(p.J_levels, seed=3)
+    return {
+        "n": n, "best_energy": float(rep.best_energy[0]),
+        "tabu_energy": float(bk),
+        "energy_ratio": float(rep.best_energy[0] / bk),
+        "dispatches": int(rep.dispatches),
+        "outer_sweeps": rep.meta.get("outer_sweeps"),
+        "wall_s": time.time() - t0,
+    }
+
+
+def run(full: bool = False):
+    t0 = time.time()
+    zoo = _solve_zoo(full)
+    decomp = _solve_decomposition(full)
+    payload = {"zoo": zoo, "decomposition": decomp,
+               "full": bool(full),
+               "wall_time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    record("workloads", payload)
+    write_root_bench("BENCH_workloads.json", payload)
+
+    n_cells = sum(len(r["solvers"]) for r in zoo.values())
+    us = (time.time() - t0) * 1e6 / max(n_cells, 1)
+    feas = [s["feasible_fraction"] for r in zoo.values()
+            for s in r["solvers"].values()]
+    derived = (f"cells={n_cells};feasible={sum(feas) / len(feas):.2f};"
+               f"decomp_ratio={decomp['energy_ratio']:.3f}")
+    print(csv_line("workloads", us, derived))
+    if any(not s["energy_identity_exact"]
+           for r in zoo.values() for s in r["solvers"].values()):
+        print("workloads: energy identity VIOLATED", file=sys.stderr)
+        raise SystemExit(1)
+    return payload
+
+
+if __name__ == "__main__":
+    run(full="--quick" not in sys.argv and "--full" in sys.argv)

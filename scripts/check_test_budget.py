@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Per-module test-suite timing gate for CI.
+
+    PYTHONPATH=src python -m pytest -q --junitxml=test-report.xml
+    python scripts/check_test_budget.py test-report.xml \
+        --per-module 240 --total 900
+
+Parses the junit XML pytest already emits, sums wall time per test module,
+and exits nonzero when any module (or the whole suite) exceeds its budget —
+so a new test that quietly turns the tier-1 suite into a 20-minute run
+fails the PR instead of taxing every future one. The report also prints the
+per-module ranking, which is the first place to look when trimming.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+from collections import defaultdict
+
+
+def _module_of(classname: str) -> str:
+    """Module segment of a junit classname. Class-based tests dot the class
+    onto the module ("tests.test_x.TestY") — keep the last *module*-looking
+    segment so a module can't dodge its budget by splitting into classes."""
+    parts = (classname or "unknown").split(".")
+    mods = [p for p in parts if p.startswith("test_")]
+    return mods[-1] if mods else parts[-1]
+
+
+def module_times(junit_path: str) -> dict[str, float]:
+    root = ET.parse(junit_path).getroot()
+    per = defaultdict(float)
+    for case in root.iter("testcase"):
+        per[_module_of(case.get("classname"))] += \
+            float(case.get("time") or 0.0)
+    return dict(per)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--per-module", type=float, default=240.0,
+                    help="max seconds any one test module may take")
+    ap.add_argument("--total", type=float, default=900.0,
+                    help="max seconds for the whole suite")
+    args = ap.parse_args()
+
+    try:
+        per = module_times(args.junit_xml)
+    except (OSError, ET.ParseError) as e:
+        # pytest never wrote (or half-wrote) the report: an earlier step is
+        # already red — don't stack a second confusing failure on top.
+        print(f"no usable junit report at {args.junit_xml} ({e}); "
+              "skipping the timing gate", file=sys.stderr)
+        return 0
+    total = sum(per.values())
+    over = []
+    print(f"{'module':32s} {'seconds':>8s}")
+    for mod, t in sorted(per.items(), key=lambda kv: -kv[1]):
+        flag = ""
+        if t > args.per_module:
+            over.append((mod, t))
+            flag = f"  OVER BUDGET (> {args.per_module:.0f}s)"
+        print(f"{mod:32s} {t:8.1f}{flag}")
+    print(f"{'TOTAL':32s} {total:8.1f}  (budget {args.total:.0f}s)")
+
+    if over:
+        print(f"\n{len(over)} module(s) over the {args.per_module:.0f}s "
+              "per-module budget — split the module or cut instance sizes",
+              file=sys.stderr)
+        return 1
+    if total > args.total:
+        print(f"\nsuite total {total:.1f}s exceeds the {args.total:.0f}s "
+              "budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

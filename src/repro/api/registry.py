@@ -31,7 +31,7 @@ import numpy as np
 from .oracle import best_known_energies, reconcile_best_known
 from .problem import Problem
 from .report import SolveReport
-from .suite import CHIP_BLOCK, ProblemSuite
+from .suite import CHIP_BLOCK, ProblemSuite, padded_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,12 +132,25 @@ def solve_suite(problems, solver: str = "engine", runs: int = 64,
 # implementations
 # ---------------------------------------------------------------------------
 
-def _check_max_n(suite: ProblemSuite, caps: SolverCaps, name: str) -> None:
-    if caps.max_n is not None:
-        big = max(suite.sizes, default=0)
-        if big > caps.max_n:
-            raise ValueError(f"solver {name!r} is limited to N<={caps.max_n} "
-                             f"(suite has N={big})")
+def _check_max_n(suite: ProblemSuite, caps: SolverCaps, name: str,
+                 block: int = CHIP_BLOCK) -> None:
+    """Enforce a solver's declared capacity BEFORE any padding happens.
+
+    ``padded_size`` happily pads an N=65 problem to a 128-spin batch, which
+    a capacity-limited solver would then silently solve as a virtual
+    two-die chip that doesn't exist. Every registered solver calls this at
+    the top of ``solve``; solvers without a limit declare ``max_n=None``.
+    """
+    if caps.max_n is None:
+        return
+    big = max(suite.sizes, default=0)
+    if big > caps.max_n:
+        pad = padded_size(big, block)
+        raise ValueError(
+            f"solver {name!r} declares max_n={caps.max_n} but the suite has "
+            f"N={big} (would pad to a {pad}-spin virtual chip); use the "
+            f"'chip-lns' decomposition solver for problems beyond one "
+            f"{caps.max_n}-spin block")
 
 
 def _bucketed_report(suite, solver_name, runs, block, run_bucket,
@@ -167,9 +180,14 @@ def _bucketed_report(suite, solver_name, runs, block, run_bucket,
         dispatches=len(buckets), meta=meta or {})
 
 
-@register_solver("engine", needs_oracle=True, exact=False, device="jax")
+@register_solver("engine", needs_oracle=True, exact=False, device="jax",
+                 max_n=CHIP_BLOCK)
 class EngineSolver:
     """The digital twin: IsingMachine -> AnnealEngine (scan/fused paths).
+
+    Capacity: ONE 64-spin die (``max_n=CHIP_BLOCK``) — the chip the paper
+    characterizes. Larger instances must go through the 'chip-lns'
+    decomposition solver, which drives this same engine block-by-block.
 
     ``variant``: 'perturbation' (paper default), 'gd' (no-perturbation
     gradient-descent baseline), 'noise' (inherent-circuit-noise baseline —
@@ -216,6 +234,7 @@ class EngineSolver:
         import jax
 
         suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
         machine = self._make_machine(budget)
 
         def run_bucket(bucket, b_idx):
@@ -262,6 +281,7 @@ class SAJaxSolver:
               block: int = CHIP_BLOCK) -> SolveReport:
         from ..solvers.sa_jax import simulated_annealing_jax_runs
         suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
         sweeps = max(1, int(round(self.n_sweeps * (budget or 1.0))))
 
         def run_bucket(bucket, b_idx):
@@ -288,6 +308,7 @@ class SANumpySolver:
               block: int = CHIP_BLOCK) -> SolveReport:
         from ..solvers.sa import simulated_annealing
         suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
         sweeps = max(1, int(round(self.n_sweeps * (budget or 1.0))))
         energies, sigmas = [], []
         t0 = time.time()
@@ -320,6 +341,7 @@ class TabuSolver:
               block: int = CHIP_BLOCK) -> SolveReport:
         from ..solvers.tabu import tabu_search
         suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
         energies, sigmas = [], []
         t0 = time.time()
         for i, p in enumerate(suite):
@@ -336,6 +358,101 @@ class TabuSolver:
             wall_s=time.time() - t0, dispatches=len(suite), meta={})
 
 
+@register_solver("chip-lns", needs_oracle=True, exact=False, device="jax")
+class ChipLNSSolver:
+    """Multi-chip decomposition: large-neighborhood search over one-die
+    blocks (``core.engine.BlockLNS``) — the registry's only solver WITHOUT
+    a capacity limit that still runs on the chip's anneal path.
+
+    Problems with N <= ``block`` are delegated verbatim to the direct
+    engine solve (same machine, same seeds — bit-identical energies), so
+    'chip-lns' is a strict superset of 'engine'. Larger problems iterate:
+    clamp all but one (block-1)-spin sub-block, anneal the free block plus
+    one boundary-field ancilla as exactly one die, and accept candidate
+    block configurations by exact float64 delta energy — every (problem,
+    restart, block) sub-instance of an outer sweep rides ONE device
+    dispatch. ``runs`` is the number of independent LNS restarts;
+    ``budget`` multiplies the outer sweep count (the engine delegation for
+    small problems keeps its own default anneal length).
+    """
+
+    def __init__(self, backend: str = "auto", inner_runs: int = 8,
+                 outer_sweeps: Optional[int] = None,
+                 anneal_sweeps: Optional[float] = None):
+        self.backend = backend
+        self.inner_runs = inner_runs
+        self.outer_sweeps = outer_sweeps
+        self.anneal_sweeps = anneal_sweeps
+
+    def _engine(self):
+        import dataclasses as dc
+
+        from ..core.device_model import DeviceModel
+        from ..core.engine import AnnealEngine
+        from ..core.machine import _BACKEND_TO_PATH
+        dev = DeviceModel()
+        if self.anneal_sweeps:
+            dev = dc.replace(dev, anneal_sweeps=self.anneal_sweeps)
+        return AnnealEngine(device=dev, path=_BACKEND_TO_PATH[self.backend])
+
+    def solve(self, suite, runs: int = 64, seed: int = 0,
+              budget: Optional[float] = None,
+              block: int = CHIP_BLOCK) -> SolveReport:
+        from ..core.engine import BlockLNS, lns_blocks
+        suite = as_suite(suite)
+        t0 = time.time()
+        # Delegation threshold: the direct engine can only take what BOTH
+        # the requested block and its own die cap allow — with block > 64
+        # the oversized problems must still decompose, not bounce off the
+        # engine's max_n check.
+        delegate_n = min(block, EngineSolver.caps.max_n or block)
+        small = [i for i, n in enumerate(suite.sizes) if n <= delegate_n]
+        big = [i for i, n in enumerate(suite.sizes) if n > delegate_n]
+
+        energies = [None] * len(suite)
+        sigmas = [None] * len(suite)
+        dispatches = 0
+        meta = {"block": block, "inner_runs": self.inner_runs,
+                "lns_problems": big}
+
+        if small:
+            sub = ProblemSuite([suite[i] for i in small])
+            rep = EngineSolver(backend=self.backend).solve(
+                sub, runs=runs, seed=seed, budget=None, block=delegate_n)
+            for k, i in enumerate(small):
+                energies[i] = rep.energies[k]
+                sigmas[i] = rep.best_sigma[k]
+            dispatches += rep.dispatches
+            meta["engine_plan"] = rep.meta.get("engine_plan")
+
+        if big:
+            n_blocks = max(len(lns_blocks(suite[i].n, delegate_n - 1))
+                           for i in big)
+            outer = self.outer_sweeps or max(4, 2 * n_blocks)
+            outer = max(1, int(round(outer * (budget or 1.0))))
+            # the die is delegate_n, never the (possibly larger) pad block:
+            # block=128 must decompose onto real 64-spin dies, not anneal a
+            # 128-spin virtual chip the capability check exists to forbid
+            lns = BlockLNS(self._engine(), chip_block=delegate_n,
+                           inner_runs=self.inner_runs)
+            results, d = lns.solve(
+                [suite[i].J_levels.astype(np.float64) for i in big],
+                restarts=runs, outer_sweeps=outer, seed=seed + 104729)
+            dispatches += d
+            meta["outer_sweeps"] = outer
+            meta["init_energies"] = {}
+            for (e, s, e0), i in zip(results, big):
+                energies[i] = e
+                sigmas[i] = s[int(np.argmin(e))]
+                meta["init_energies"][i] = e0.tolist()
+
+        return SolveReport(
+            solver=self.name, runs=runs, energies=energies,
+            best_sigma=sigmas, problem_hashes=suite.hashes,
+            sizes=suite.sizes, scales=tuple(p.scale for p in suite),
+            wall_s=time.time() - t0, dispatches=dispatches, meta=meta)
+
+
 @register_solver("brute-force", needs_oracle=False, exact=True,
                  device="numpy", max_n=24)
 class BruteForceSolver:
@@ -347,7 +464,7 @@ class BruteForceSolver:
               block: int = CHIP_BLOCK) -> SolveReport:
         from ..solvers.brute_force import brute_force_ground_state
         suite = as_suite(suite)
-        _check_max_n(suite, self.caps, self.name)
+        _check_max_n(suite, self.caps, self.name, block)
         energies, sigmas = [], []
         t0 = time.time()
         for p in suite:

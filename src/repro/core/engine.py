@@ -251,6 +251,123 @@ class AnnealEngine:
                             energy_traj=None)
 
 
+# ---------------------------------------------------------------------------
+# multi-chip decomposition: large-neighborhood search over one-die blocks
+# ---------------------------------------------------------------------------
+
+def lns_blocks(n: int, free_block: int) -> list[np.ndarray]:
+    """Balanced contiguous partition of [0, n) into ceil(n/free_block)
+    blocks of at most ``free_block`` spins each."""
+    if free_block < 1:
+        raise ValueError(f"free_block must be >= 1, got {free_block}")
+    n_blocks = max(1, -(-n // free_block))
+    return [np.asarray(b) for b in np.array_split(np.arange(n), n_blocks)]
+
+
+class BlockLNS:
+    """Large-neighborhood search past the single-die limit (N > chip block).
+
+    The chip solves at most ``chip_block`` all-to-all spins. For larger
+    problems we clamp all but one sub-block and anneal the free block on the
+    die: each sub-block holds ``chip_block - 1`` free spins plus ONE
+    boundary ancilla whose coupling row carries the exact field from every
+    clamped spin (``h_i = sum_{j not in blk} J_ij s_j``) — so a sub-solve
+    is exactly one 64-spin die dispatch, and the bias-free Z2 symmetry
+    makes ancilla pinning unnecessary (candidates are gauge-fixed after).
+
+    Per outer sweep, EVERY (problem, restart, block) sub-instance across
+    the whole batch is stacked into one ``(S, chip_block, chip_block)``
+    engine dispatch. Candidate block configurations are then accepted
+    sequentially per block by EXACT delta energy against the *current*
+    state (float64 on the full J), so the per-restart incumbent energy is
+    monotonically non-increasing — the solver can never end worse than its
+    own initialization. Boundary-field couplings are continuous (they sum
+    many DAC levels), which the digital twin integrates exactly; on silicon
+    they correspond to the multi-die field-composition DAC discussed in
+    API.md.
+    """
+
+    def __init__(self, engine: AnnealEngine, chip_block: int = 64,
+                 inner_runs: int = 8):
+        self.engine = engine
+        self.chip_block = chip_block
+        self.inner_runs = inner_runs
+
+    def solve(self, J_list, restarts: int, outer_sweeps: int, seed: int = 0):
+        """Minimize level-space H = -0.5 s'Js for each (N_i, N_i) in
+        ``J_list``. Returns (per-problem (energies (R,), sigma (R, N_i),
+        init_energies (R,)), dispatches)."""
+        from .lfsr import lfsr_voltage_inits
+        cb = self.chip_block
+        rng = np.random.default_rng(seed)
+        Js = [np.asarray(J, dtype=np.float64) for J in J_list]
+        blocks = [lns_blocks(J.shape[0], cb - 1) for J in Js]
+        states = [rng.choice([-1.0, 1.0], size=(restarts, J.shape[0]))
+                  for J in Js]
+
+        def energies(p):
+            S = states[p]
+            return -0.5 * np.einsum("ri,ij,rj->r", S, Js[p], S)
+
+        init_e = [energies(p) for p in range(len(Js))]
+
+        # flat subproblem order: for each problem, for each block, R restarts
+        sub_of = [(p, b) for p in range(len(Js))
+                  for b in range(len(blocks[p]))]
+        n_subs = len(sub_of) * restarts
+
+        dispatches = 0
+        for sweep in range(outer_sweeps):
+            batch = np.zeros((n_subs, cb, cb), dtype=np.float32)
+            k = 0
+            for p, b in sub_of:
+                J, S, blk = Js[p], states[p], blocks[p][b]
+                m = len(blk)
+                Jbb = J[np.ix_(blk, blk)]
+                h = S @ J[:, blk] - S[:, blk] @ Jbb        # (R, m) exact field
+                rows = slice(k, k + restarts)
+                batch[rows, 0, 1:m + 1] = h
+                batch[rows, 1:m + 1, 0] = h
+                batch[rows, 1:m + 1, 1:m + 1] = Jbb        # broadcast once
+                k += restarts
+            v0 = lfsr_voltage_inits(cb, self.inner_runs,
+                                    seed=seed + 7919 * (sweep + 1))
+            res = self.engine.run(batch, np.broadcast_to(
+                v0, (n_subs,) + v0.shape))
+            dispatches += 1
+            e = np.asarray(res.energy)                     # (S, inner_runs)
+            sig = np.asarray(res.sigma)                    # (S, inner, cb)
+            best = e.argmin(axis=1)
+            cand_all = np.take_along_axis(
+                sig, best[:, None, None], axis=1)[:, 0]    # (S, cb)
+
+            k = 0
+            for p, b in sub_of:
+                J, S, blk = Js[p], states[p], blocks[p][b]
+                m = len(blk)
+                cand = cand_all[k:k + restarts]
+                k += restarts
+                # gauge-fix the boundary ancilla to +1, trim to the block
+                cand = (cand[:, 1:m + 1] * cand[:, :1]).astype(np.float64)
+                Jbb = J[np.ix_(blk, blk)]
+                # exact delta vs the CURRENT state (earlier blocks of this
+                # sweep may already have moved; h is recomputed, not reused)
+                h = S @ J[:, blk] - S[:, blk] @ Jbb
+                e_new = -np.einsum("rm,rm->r", h, cand) \
+                    - 0.5 * np.einsum("rm,mk,rk->r", cand, Jbb, cand)
+                cur = S[:, blk]
+                e_old = -np.einsum("rm,rm->r", h, cur) \
+                    - 0.5 * np.einsum("rm,mk,rk->r", cur, Jbb, cur)
+                acc = np.flatnonzero(e_new < e_old - 1e-9)
+                if len(acc):
+                    S[np.ix_(acc, blk)] = cand[acc]
+
+        out = []
+        for p in range(len(Js)):
+            out.append((energies(p), states[p].astype(np.int8), init_e[p]))
+        return out, dispatches
+
+
 def _is_pow2(x: float) -> bool:
     """True when x is an exact power of two (mantissa 0.5 after frexp)."""
     import math

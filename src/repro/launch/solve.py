@@ -3,11 +3,20 @@
     PYTHONPATH=src python -m repro.launch.solve --solver engine \
         --spins 64 --density 0.5 --problems 4 --runs 256
 
+    # 128-spin Max-Cut on the multi-chip decomposition solver
+    PYTHONPATH=src python -m repro.launch.solve --solver chip-lns \
+        --workload maxcut --spins 128 --problems 1 --runs 16
+
+    # NP-hard zoo: coloring / mis / vertex-cover / 3sat / tsp
+    PYTHONPATH=src python -m repro.launch.solve --solver tabu \
+        --workload mis --spins 12 --runs 32
+
 Any registered solver (``--list-solvers``) runs behind the same
 Problem/Suite/Report surface; the best-known oracle is disk-cached by
-problem content hash (``--no-cache`` bypasses). For virtual chips > 64
-spins the engine path shards problems x runs over the active mesh exactly
-as before — the suite is bucketed into pad-to-64 device batches first.
+problem content hash (``--no-cache`` bypasses). Single-die solvers declare
+``max_n`` and reject suites past one 64-spin block — ``chip-lns``
+decomposes larger instances onto the same engine. Zoo workloads decode the
+best configuration back to native form and verify it (``repro.workloads``).
 """
 from __future__ import annotations
 
@@ -15,20 +24,61 @@ import argparse
 
 from ..api import ProblemSuite, get_solver, list_solvers, solve_suite
 
+#: --workload values that are plain Problem constructors, not zoo entries.
+_BUILTIN = ("random-qubo", "maxcut")
+
+
+def build_suite(workload: str, n: int, density: float, problems: int,
+                seed: int) -> ProblemSuite:
+    """One suite for any workload name: built-ins keep the paper's problem
+    families; everything else resolves through the ``repro.workloads``
+    registry (``n`` is the native size — nodes / variables / cities).
+    ``--density`` reaches every generator that takes one (the graph
+    workloads); 3sat/tsp have their own shape knobs and ignore it."""
+    import inspect
+
+    from ..api import Problem
+    if workload == "random-qubo":
+        return ProblemSuite.random(n, density, problems, seed=seed)
+    if workload == "maxcut":
+        return ProblemSuite([Problem.maxcut(n, density, seed=seed + i)
+                             for i in range(problems)])
+    from ..workloads import get_workload
+    gen = get_workload(workload).random_instance
+    kw = {"density": density} \
+        if "density" in inspect.signature(gen).parameters else {}
+    return ProblemSuite.workload(workload, size=n, num_problems=problems,
+                                 seed=seed, **kw)
+
 
 def solve(n_spins: int, density: float, problems: int, runs: int,
           seed: int = 0, solver: str = "engine", backend: str = "auto",
           perturbation: bool = True, autotune: bool = False,
-          budget: float | None = None, use_cache: bool = True):
-    """Solve one random-QUBO cell through the registry; returns the
-    oracle-attached :class:`repro.api.SolveReport`."""
-    suite = ProblemSuite.random(n_spins, density, problems, seed=seed)
+          budget: float | None = None, use_cache: bool = True,
+          workload: str = "random-qubo"):
+    """Solve one workload cell through the registry; returns
+    ``(report, suite)`` — the oracle-attached
+    :class:`repro.api.SolveReport` plus the suite it solved (callers need
+    the problems to decode zoo solutions back to native form)."""
+    suite = build_suite(workload, n_spins, density, problems, seed)
     opts = {}
     if solver == "engine":
         opts = dict(backend=backend, autotune=autotune,
                     variant="perturbation" if perturbation else "gd")
+    elif solver == "chip-lns":
+        opts = dict(backend=backend)
     return solve_suite(suite, solver=solver, runs=runs, seed=seed + 1,
-                       budget=budget, use_cache=use_cache, **opts)
+                       budget=budget, use_cache=use_cache, **opts), suite
+
+
+def _print_native(workload: str, suite: ProblemSuite, report) -> None:
+    """Decode + verify each best configuration back in native terms."""
+    from ..workloads import get_workload
+    wl = get_workload(workload)
+    for i, p in enumerate(suite):
+        res = wl.verify(p, wl.decode(p, report.best_sigma[i]))
+        print(f"[{workload} #{i}] feasible={res.feasible} "
+              f"objective={res.objective:g} ({wl.sense})")
 
 
 def main():
@@ -37,16 +87,23 @@ def main():
                     help="registered solver name (see --list-solvers)")
     ap.add_argument("--list-solvers", action="store_true",
                     help="print the solver registry and exit")
-    ap.add_argument("--spins", type=int, default=64)
+    ap.add_argument("--workload", default="random-qubo",
+                    help="problem family: random-qubo, maxcut, or any "
+                         "registered zoo workload (coloring, mis, "
+                         "vertex-cover, 3sat, tsp)")
+    ap.add_argument("--spins", type=int, default=64,
+                    help="native size: spins for random-qubo/maxcut, "
+                         "nodes/variables/cities for zoo workloads")
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--problems", type=int, default=4)
     ap.add_argument("--runs", type=int, default=256)
     ap.add_argument("--budget", type=float, default=None,
                     help="solver-relative effort multiplier (anneal length "
-                         "for engine, sweeps for SA, iterations for tabu)")
+                         "for engine, outer sweeps for chip-lns, sweeps for "
+                         "SA, iterations for tabu)")
     ap.add_argument("--backend", choices=["jnp", "pallas", "auto"],
                     default="auto",
-                    help="[engine] AnnealEngine path: jnp=scan, "
+                    help="[engine/chip-lns] AnnealEngine path: jnp=scan, "
                          "pallas=fused, auto=engine decides")
     ap.add_argument("--no-perturbation", action="store_true",
                     help="[engine] gradient-descent baseline variant")
@@ -65,16 +122,24 @@ def main():
         return
 
     get_solver(args.solver)     # fail fast on unknown names
-    report = solve(args.spins, args.density, args.problems, args.runs,
-                   solver=args.solver, backend=args.backend,
-                   perturbation=not args.no_perturbation,
-                   autotune=args.autotune, budget=args.budget,
-                   use_cache=not args.no_cache)
+    report, suite = solve(
+        args.spins, args.density, args.problems, args.runs,
+        solver=args.solver, backend=args.backend,
+        perturbation=not args.no_perturbation, autotune=args.autotune,
+        budget=args.budget, use_cache=not args.no_cache,
+        workload=args.workload)
     plan = report.meta.get("engine_plan")
     if plan:
         print(f"[engine] path={plan['path']} block_r={plan['block_r']} "
               f"j_dtype={plan['j_dtype']} ({plan['reason']})")
     print(report.summary())
+    if args.workload not in _BUILTIN:
+        _print_native(args.workload, suite, report)
+    elif args.workload == "maxcut":
+        from ..core.hamiltonian import maxcut_value
+        for i, p in enumerate(suite):
+            cut = float(maxcut_value(p.meta["W"], report.best_sigma[i]))
+            print(f"[maxcut #{i}] N={p.n} cut weight={cut:g}")
 
 
 if __name__ == "__main__":

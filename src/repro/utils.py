@@ -2,9 +2,12 @@
 
 ``load_json_cache`` / ``store_json_cache`` back both persistent caches in
 the repo — the AnnealEngine autotune cache (``core/engine.py``) and the
-best-known oracle cache (``api/oracle.py``). Loads tolerate missing or
-corrupt files; stores are atomic (tmp + rename) and best-effort — a cache
-is an optimization, so persistence failures never fail a solve.
+best-known oracle cache (``api/oracle.py``). Loads tolerate missing files
+and QUARANTINE corrupt/truncated ones (renamed to ``<path>.corrupt`` so the
+bad payload is kept for inspection but never re-read, and the next store
+starts from a clean slate); stores are atomic (tmp + rename) and
+best-effort — a cache is an optimization, so persistence failures never
+fail a solve.
 """
 from __future__ import annotations
 
@@ -16,7 +19,16 @@ def load_json_cache(path: str) -> dict:
     try:
         with open(path) as f:
             return json.load(f)
-    except (OSError, ValueError):
+    except OSError:
+        return {}
+    except ValueError:
+        # corrupt / truncated (e.g. a killed writer before the atomic-store
+        # change, or manual editing): move it aside instead of crashing or
+        # silently shadowing it forever.
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
         return {}
 
 

@@ -229,6 +229,45 @@ def test_reconcile_upgrades_stale_oracle(tmp_path):
         <= rep.best_energy[0] + 1e-9
 
 
+def test_oracle_cache_corruption_quarantined_not_crashed(tmp_path):
+    """A corrupt/truncated cache file is moved aside (<path>.corrupt), the
+    energies are recomputed, and a clean cache is rebuilt in place."""
+    path = tmp_path / "oracle.json"
+    suite = ProblemSuite.workload("mis", size=8, num_problems=2, seed=5)
+    bk = best_known_energies(suite, path=str(path))
+    good = path.read_text()
+
+    for garbage in (good[: len(good) // 2],       # truncated writer crash
+                    "{not json at all",           # mangled by hand
+                    ""):                          # zero-length file
+        path.write_text(garbage)
+        out = best_known_energies(suite, path=str(path))
+        np.testing.assert_array_equal(out, bk)    # recomputed, not crashed
+        quarantined = tmp_path / "oracle.json.corrupt"
+        assert quarantined.read_text() == garbage
+        assert json.loads(path.read_text()).keys() == set(suite.hashes)
+        quarantined.unlink()
+
+
+def test_reconcile_keeps_better_bound_for_workload_problems(tmp_path):
+    """The oracle min-merge under zoo encodings: a stale weaker entry is
+    upgraded, a stronger cached bound survives a worse solve."""
+    import repro.api as api
+    path = str(tmp_path / "oracle.json")
+    suite = ProblemSuite.workload("vertex-cover", size=8, seed=3)
+    bk = best_known_energies(suite, path=path)    # exact (N <= 20)
+    # a worse candidate must NOT displace the exact cached bound
+    out = api.reconcile_best_known(suite, bk + 25.0, path=path)
+    np.testing.assert_array_equal(out, bk)
+    assert json.load(open(path))[suite[0].content_hash]["energy"] == bk[0]
+    # a (hypothetically) better candidate wins and is persisted
+    out = api.reconcile_best_known(suite, bk - 4.0, path=path,
+                                   method="test-better")
+    np.testing.assert_array_equal(out, bk - 4.0)
+    entry = json.load(open(path))[suite[0].content_hash]
+    assert entry["energy"] == bk[0] - 4.0 and entry["method"] == "test-better"
+
+
 def test_self_oracle_solvers_skip_external_oracle(tmp_path, monkeypatch):
     # tabu / brute-force are their own oracle: solve_suite must not run the
     # oracle solver a second time

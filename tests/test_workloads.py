@@ -1,0 +1,146 @@
+"""Workload zoo: property-based encode→solve→decode→verify round-trips.
+
+Three layers of guarantees, every one exact (integer arithmetic end to end):
+
+1. The affine energy identity — for EVERY ±1 configuration, the native
+   penalty-model value recomputed from the decoded bits equals
+   ``(Problem.energy + offset) / 4`` bit-for-bit (``base.py`` contract).
+2. Penalty sufficiency — for small instances, exhaustive search proves no
+   ground state violates a hard constraint (the penalty weights dominate),
+   and the decoded ground-state objective equals the native optimum found
+   by brute-forcing the ORIGINAL combinatorial problem.
+3. Round-trips through the registry — every registered solver that
+   declares capacity for an instance solves it to a feasible decode whose
+   objective matches the energy through the affine map.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+from repro.api import ProblemSuite, get_solver, list_solvers
+from repro.solvers.brute_force import brute_force_ground_state
+from repro.workloads import (WORKLOADS, get_workload, model_energy,
+                             spins_to_bits)
+
+#: native sizes for solver round-trips (all encodings land at N <= 24 spins
+#: so even brute force participates).
+SIZES = {"mis": 9, "vertex-cover": 9, "coloring": 5, "3sat": 5, "tsp": 4}
+#: smaller still for exhaustive penalty-sufficiency checks.
+TINY = {"mis": 7, "vertex-cover": 7, "coloring": 4, "3sat": 4, "tsp": 3}
+
+
+def _native_model(wl, problem, objective):
+    """The penalty-free model value a FEASIBLE objective corresponds to."""
+    if wl.name == "mis":
+        return -objective
+    if wl.name == "3sat":
+        return len(problem.meta["instance"]["clauses"]) - objective
+    return objective            # vertex-cover, coloring, tsp: f == objective
+
+
+def _native_optimum(wl, problem):
+    """Exhaustive solve of the ORIGINAL combinatorial problem (tiny N)."""
+    inst = problem.meta["instance"]
+    if wl.name in ("mis", "vertex-cover"):
+        n, edges = inst["n"], inst["edges"]
+        best = None
+        for code in range(1 << n):
+            chosen = [i for i in range(n) if code >> i & 1]
+            res = wl.verify(problem, chosen)
+            if res.feasible:
+                better = best is None or \
+                    (res.objective > best if wl.sense == "max"
+                     else res.objective < best)
+                best = res.objective if better else best
+        return best
+    if wl.name == "coloring":
+        return 0.0              # generator plants a proper coloring
+    if wl.name == "3sat":
+        return float(len(inst["clauses"]))   # planted satisfiable
+    if wl.name == "tsp":
+        n = inst["n"]
+        return min(wl.verify(problem, [0] + list(perm)).objective
+                   for perm in itertools.permutations(range(1, n)))
+    raise AssertionError(wl.name)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10))
+def test_affine_energy_identity_everywhere(seed):
+    """model_value(bits) == (energy + offset)/4 for ARBITRARY spins — the
+    identity must hold off the feasible manifold too (penalties included)."""
+    rng = np.random.default_rng(seed)
+    for name, wl in sorted(WORKLOADS.items()):
+        p = wl.random_problem(SIZES[name], seed=seed)
+        assert p.meta["qubo_scale"] == 4
+        for _ in range(4):
+            s = rng.choice([-1, 1], size=p.n)
+            s[0] = rng.choice([-1, 1])       # either ancilla gauge
+            assert wl.model_value(p, spins_to_bits(s)) == \
+                model_energy(p, s), (name, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=5))
+def test_penalty_weights_sufficient_by_brute_force(seed):
+    """No constraint-violating ground states, and the decoded ground-state
+    objective is the true native optimum."""
+    for name, wl in sorted(WORKLOADS.items()):
+        p = wl.random_problem(TINY[name], seed=seed)
+        e, s = brute_force_ground_state(p.J_levels)
+        res = wl.roundtrip(p, s)
+        assert res.feasible, (name, seed, res)
+        assert res.objective == _native_optimum(wl, p), (name, seed)
+        # feasible => penalty-free: the energy IS the native objective
+        assert _native_model(wl, p, res.objective) == \
+            (e + p.meta["offset"]) / p.meta["qubo_scale"], (name, seed)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_roundtrip_through_every_capable_solver(name):
+    """encode → solve → decode → verify through the registry, for every
+    solver whose declared capacity covers the encoded instance."""
+    wl = get_workload(name)
+    p = wl.random_problem(SIZES[name], seed=2)
+    suite = ProblemSuite([p])
+    solved = []
+    for sname, caps in list_solvers().items():
+        if caps.max_n is not None and p.n > caps.max_n:
+            continue
+        rep = get_solver(sname).solve(suite, runs=48, seed=5, block=32)
+        # the affine identity holds for whatever the solver returned ...
+        mv = wl.model_value(p, spins_to_bits(rep.best_sigma[0]))
+        assert mv == model_energy(p, rep.best_sigma[0]), sname
+        # ... and at these sizes every solver reaches a feasible decode
+        res = wl.roundtrip(p, rep.best_sigma[0])
+        assert res.feasible, (name, sname, res)
+        assert _native_model(wl, p, res.objective) == mv, (name, sname)
+        solved.append(sname)
+    # brute-force/engine/chip-lns/tabu/sa-* must all have participated
+    assert len(solved) == len(list_solvers()), solved
+
+
+def test_encoding_dac_fit_flags_and_hard_cap():
+    wl = get_workload("mis")
+    # a 13-star exceeds the ±15 bias range (h = 2 - 2*deg) but encodes fine
+    star = {"n": 14, "edges": [[0, i] for i in range(1, 14)]}
+    p = wl.encode(star)
+    assert not p.meta["fits_dac"]
+    assert abs(p.levels).max() == 2 * 13 - 2
+    # degree-capped generator output stays on the single-die grid
+    assert wl.random_problem(12, seed=0).meta["fits_dac"]
+    # runaway accumulation (level > 127) is a modelling error, not a solve
+    huge = {"n": 72, "edges": [[0, i] for i in range(1, 72)]}
+    with pytest.raises(ValueError, match="level"):
+        wl.encode(huge)
+
+
+def test_suite_workload_constructor_batches_zoo_instances():
+    suite = ProblemSuite.workload("coloring", size=5, num_problems=3, seed=7)
+    assert len(suite) == 3
+    assert all(p.kind == "coloring" for p in suite)
+    assert len({p.content_hash for p in suite}) == 3     # distinct instances
+    # encoded problems bucket exactly like any other Problem
+    assert suite.num_dispatches() == 1
