@@ -2,17 +2,20 @@
 
 Times three solvers on the same problem set and records anneals/second:
 
-  scan   — pure-JAX lax.scan reference (the CPU/GPU hot path)
-  fused  — Pallas VMEM kernel, schedule derived in-kernel (interpret mode
-           on CPU — a correctness harness, not a speed claim; compiled on
-           TPU)
-  jax-sa — the on-device simulated-annealing baseline (vmapped restarts)
+  scan     — pure-JAX lax.scan reference (the CPU/GPU hot path)
+  fused    — Pallas VMEM kernel, schedule derived in-kernel (interpret mode
+             on CPU — a correctness harness, not a speed claim; compiled on
+             TPU)
+  jax-sa   — the on-device simulated-annealing baseline (vmapped restarts)
+  tabu-jax — the on-device tabu oracle tier (vmapped restarts, lockstep
+             lax.scan iterations)
 
-Also verifies the JAX SA port against the numpy SA baseline on a fixed
-seed set (both must land on the same best energies). Results go to
-``experiments/bench/kernel_throughput.json`` (historic location) AND
-``BENCH_kernel.json`` at the repo root, so CI archives the perf trajectory
-from every run. One chip-die equivalent = 1/(3 us) ~ 333k anneals/s.
+Also verifies the JAX SA and JAX tabu ports against their numpy baselines
+on a fixed seed set (each pair must land on the same best energies).
+Results go to ``experiments/bench/kernel_throughput.json`` (historic
+location) AND ``BENCH_kernel.json`` at the repo root, so CI archives the
+perf trajectory from every run. One chip-die equivalent = 1/(3 us) ~ 333k
+anneals/s.
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ from repro.core import AnnealEngine, DeviceModel, DEFAULT_PERTURBATION
 from repro.core.engine import time_call
 from repro.core.lfsr import lfsr_voltage_inits
 from repro.problems import problem_set
-from repro.solvers import simulated_annealing, simulated_annealing_jax
+from repro.solvers import (simulated_annealing, simulated_annealing_jax,
+                           tabu_search, tabu_search_jax_runs)
 
 from .common import csv_line, record, write_root_bench
 
@@ -49,27 +53,47 @@ def run(full: bool = False):
         J, n_sweeps=sa_sweeps, n_restarts=sa_restarts, seed=0)[0], iters=1)
     sa_anneals = P * sa_restarts
 
-    # -- JAX SA vs numpy SA: same best energy on a fixed seed set ----------
+    tabu_iters, tabu_restarts = (40 * n, 32) if full else (10 * n, 16)
+    tabu_search_jax_runs(J, n_iters=tabu_iters, n_restarts=tabu_restarts,
+                         seed=0)                         # compile (warmup)
+    t_tabu = time_call(lambda: tabu_search_jax_runs(
+        J, n_iters=tabu_iters, n_restarts=tabu_restarts, seed=0)[0], iters=1)
+    tabu_anneals = P * tabu_restarts
+
+    # -- JAX SA / JAX tabu vs numpy: same best energy on a fixed seed set --
     match_ps = problem_set(32, 0.5, 2, seed=77)
     Jm = np.asarray(dev.quantize(match_ps.J))
     e_np = np.array([simulated_annealing(Jm[p], n_sweeps=300, n_restarts=64,
                                          seed=p)[0] for p in range(2)])
     e_jx, _ = simulated_annealing_jax(Jm, n_sweeps=300, n_restarts=64, seed=0)
     sa_match = bool(np.allclose(e_np, e_jx))
+    te_np = np.array([tabu_search(Jm[p], n_restarts=32, seed=p)[0]
+                      for p in range(2)])
+    # patience=0: parity mode (kicks off) — compare numpy-identical
+    # semantics, not the kick-enhanced production default
+    te_jx = tabu_search_jax_runs(Jm, n_restarts=32, seed=0,
+                                 patience=0)[0].min(axis=1)
+    tabu_match = bool(np.allclose(te_np, te_jx))
 
     on_tpu = jax.default_backend() == "tpu"
     payload = {
         "backend": jax.default_backend(),
         "anneals": anneals, "steps": dev.n_steps,
         "scan_s": t_scan, "fused_s": t_fused, "jax_sa_s": t_sa,
+        "tabu_jax_s": t_tabu,
         "scan_anneals_per_s": anneals / t_scan,
         "fused_anneals_per_s": anneals / t_fused,
         "jax_sa_anneals_per_s": sa_anneals / t_sa,
+        "tabu_jax_anneals_per_s": tabu_anneals / t_tabu,
         "jax_sa_sweeps": sa_sweeps, "jax_sa_restarts": sa_restarts,
+        "tabu_jax_iters": tabu_iters, "tabu_jax_restarts": tabu_restarts,
         "chip_equiv_dies_scan": anneals / t_scan / 333333.0,
         "sa_best_energy_numpy": e_np.tolist(),
         "sa_best_energy_jax": np.asarray(e_jx).tolist(),
         "sa_jax_matches_numpy": sa_match,
+        "tabu_best_energy_numpy": te_np.tolist(),
+        "tabu_best_energy_jax": np.asarray(te_jx).tolist(),
+        "tabu_jax_matches_numpy": tabu_match,
         "note": ("fused timing is interpret=True (Python) off-TPU — "
                  "correctness mode, not a speed claim; TPU projections in "
                  "EXPERIMENTS.md use the dry-run roofline instead"
@@ -81,7 +105,8 @@ def run(full: bool = False):
                    f"scan={anneals/t_scan:.0f}anneals/s;"
                    f"fused={anneals/t_fused:.0f}anneals/s;"
                    f"jax_sa={sa_anneals/t_sa:.0f}anneals/s;"
-                   f"sa_match={sa_match}"))
+                   f"tabu_jax={tabu_anneals/t_tabu:.0f}anneals/s;"
+                   f"sa_match={sa_match};tabu_match={tabu_match}"))
     return payload
 
 

@@ -10,6 +10,15 @@ the payload). The suite mixes the paper's random-QUBO grid with two
 encoded zoo workloads (MIS + graph coloring, ``repro.workloads``) so every
 solver is exercised on structured penalty landscapes, not just random
 couplings — the encodings ride the same ``Problem`` surface for free.
+
+Two gates make this a CI check, not just a report:
+
+  * every ``device="jax"`` solver must take at most one dispatch per pad
+    bucket of its suite — a batched solver quietly regressing to
+    per-problem dispatch fails the run;
+  * jax solvers run with ``warmup=True``, so ``anneals_per_s`` measures
+    steady-state throughput and one-time XLA compilation lands in the
+    separate ``compile_s`` column.
 """
 from __future__ import annotations
 
@@ -38,13 +47,24 @@ def run(full: bool = False):
             keep = [i for i, n in enumerate(suite.sizes) if n <= caps.max_n]
             sub = ProblemSuite([suite[i] for i in keep])
             sub_bk = bk[keep]
-        rep = get_solver(name).solve(sub, runs=runs, seed=11)
+        try:
+            solver = (get_solver(name, warmup=True) if caps.device == "jax"
+                      else get_solver(name))
+        except TypeError:       # user-registered solver without warmup kwarg
+            solver = get_solver(name)
+        rep = solver.solve(sub, runs=runs, seed=11)
+        if caps.device == "jax" and rep.dispatches > sub.num_dispatches():
+            raise RuntimeError(
+                f"batched solver {name!r} issued {rep.dispatches} dispatches "
+                f"for a {sub.num_dispatches()}-bucket suite — the one-"
+                f"dispatch-per-bucket hot path regressed")
         rep.attach_oracle(rep.best_energy if caps.exact else sub_bk)
         m = rep.metrics()
         results[name] = {
             "anneals_per_s": float(rep.anneals_per_s),
             "success_rate": float(m["mean_success_rate"]),
             "wall_s": float(rep.wall_s),
+            "compile_s": float(rep.compile_s),
             "dispatches": int(rep.dispatches),
             "num_problems": rep.num_problems,
             "runs": int(rep.runs),

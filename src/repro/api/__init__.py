@@ -12,15 +12,17 @@ capability flags, oracle cache).
 from .problem import MAX_LEVEL, Problem
 from .suite import CHIP_BLOCK, Bucket, ProblemSuite, padded_size
 from .report import SolveReport
-from .oracle import (best_known_energies, cache_path as oracle_cache_path,
-                     reconcile_best_known)
+from .budget import SearchEffort, budget_factor, search_effort
+from .oracle import (BRUTE_FORCE_MAX_N, best_known_energies,
+                     cache_path as oracle_cache_path, reconcile_best_known)
 from .registry import (Solver, SolverCaps, as_suite, get_solver,
                        list_solvers, register_solver, solve_suite)
 
 __all__ = [
     "MAX_LEVEL", "Problem", "CHIP_BLOCK", "Bucket", "ProblemSuite",
-    "padded_size", "SolveReport", "best_known_energies", "oracle_cache_path",
-    "reconcile_best_known",
+    "padded_size", "SolveReport", "SearchEffort", "budget_factor",
+    "search_effort", "BRUTE_FORCE_MAX_N", "best_known_energies",
+    "oracle_cache_path", "reconcile_best_known",
     "Solver", "SolverCaps", "as_suite", "get_solver", "list_solvers",
     "register_solver", "solve_suite",
 ]

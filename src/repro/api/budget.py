@@ -1,0 +1,55 @@
+"""Uniform ``budget -> (iters, restarts, rungs)`` mapping for every solver.
+
+``solve(suite, runs, seed, budget)`` takes one solver-relative effort
+multiplier. Before this module each solver inverted it its own way
+(``max(1, int(round(base * (budget or 1.0))))`` copy-pasted with drift
+hazards); now every search solver maps the user's knobs through ONE
+function with one documented semantics:
+
+  * ``budget`` multiplies the PER-RESTART iteration budget (sweeps for the
+    SAs and PT, flips for tabu, anneal length for the engine) — never the
+    restart count, so ``runs`` always means what the caller asked for;
+  * ``restarts`` is the report's ``runs`` (independent searches);
+  * ``rungs`` is internal parallelism per restart (PT temperature ladder;
+    1 for single-trajectory solvers).
+
+Total work is proportional to ``iters * restarts * rungs`` — reports can
+account for it uniformly across solvers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def budget_factor(budget: Optional[float]) -> float:
+    """Effort multiplier as a float (None -> 1.0). Rejects nonpositive
+    budgets — a zero budget silently degenerating to one iteration is how
+    benchmark comparisons go quietly wrong."""
+    if budget is None:
+        return 1.0
+    budget = float(budget)
+    if budget <= 0:
+        raise ValueError(f"budget must be positive, got {budget}")
+    return budget
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchEffort:
+    iters: int          # per-restart iteration budget (budget-scaled)
+    restarts: int       # independent restarts == the report's ``runs``
+    rungs: int = 1      # internal replicas per restart (PT ladder)
+
+    @property
+    def total_iters(self) -> int:
+        """Work proxy: lockstep iterations x restarts x rungs."""
+        return self.iters * self.restarts * self.rungs
+
+
+def search_effort(base_iters: float, runs: int,
+                  budget: Optional[float] = None,
+                  rungs: int = 1) -> SearchEffort:
+    """The one mapping: scale ``base_iters`` by ``budget``, floor at 1."""
+    return SearchEffort(
+        iters=max(1, int(round(base_iters * budget_factor(budget)))),
+        restarts=max(1, int(runs)), rungs=max(1, int(rungs)))

@@ -28,6 +28,8 @@ from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from ..solvers.brute_force import BRUTE_FORCE_MAX_N
+from .budget import budget_factor, search_effort
 from .oracle import best_known_energies, reconcile_best_known
 from .problem import Problem
 from .report import SolveReport
@@ -154,30 +156,45 @@ def _check_max_n(suite: ProblemSuite, caps: SolverCaps, name: str,
 
 
 def _bucketed_report(suite, solver_name, runs, block, run_bucket,
-                     meta=None, buckets=None) -> SolveReport:
+                     meta=None, buckets=None, warmup=False) -> SolveReport:
     """Shared bucket loop: run ``run_bucket(bucket, b_idx) -> (e, s)`` with
     ``e (P, R)`` level-space energies and ``s (P, R, n_pad)`` spins; trim
     and reorder into suite order. Pass ``buckets`` if already built (the
-    padded batches are the expensive part — don't stack them twice)."""
+    padded batches are the expensive part — don't stack them twice).
+
+    With ``warmup`` each bucket is dispatched twice: the first call pays
+    XLA compilation/tracing, the second is timed. ``wall_s`` then measures
+    steady-state solve time (what ``anneals_per_s`` should charge the
+    solver for) and ``compile_s`` the one-time difference — seeds are
+    per-bucket deterministic, so both calls return identical results."""
     buckets = buckets if buckets is not None else suite.buckets(block)
     energies = [None] * len(suite)
     sigmas = [None] * len(suite)
-    t0 = time.time()
+    wall = compile_s = 0.0
     for b_idx, bucket in enumerate(buckets):
+        if warmup:
+            t0 = time.time()
+            for arr in run_bucket(bucket, b_idx):
+                np.asarray(arr)                    # force device sync
+            t_first = time.time() - t0
+        t0 = time.time()
         e, s = run_bucket(bucket, b_idx)
         e = np.asarray(e, dtype=np.float64)
         s = np.asarray(s)
+        dt = time.time() - t0
+        wall += dt
+        if warmup:
+            compile_s += max(0.0, t_first - dt)
         for k, i in enumerate(bucket.indices):
             n = suite[i].n
             best = int(np.argmin(e[k]))
             energies[i] = e[k]
             sigmas[i] = s[k, best, :n].astype(np.int8)
-    wall = time.time() - t0
     return SolveReport(
         solver=solver_name, runs=runs, energies=energies, best_sigma=sigmas,
         problem_hashes=suite.hashes, sizes=suite.sizes,
         scales=tuple(p.scale for p in suite), wall_s=wall,
-        dispatches=len(buckets), meta=meta or {})
+        compile_s=compile_s, dispatches=len(buckets), meta=meta or {})
 
 
 @register_solver("engine", needs_oracle=True, exact=False, device="jax",
@@ -200,13 +217,14 @@ class EngineSolver:
 
     def __init__(self, backend: str = "auto", autotune: bool = False,
                  variant: str = "perturbation", machine=None,
-                 noise_sigma: float = 2.0):
+                 noise_sigma: float = 2.0, warmup: bool = False):
         if variant not in ("perturbation", "gd", "noise"):
             raise ValueError(f"unknown engine variant {variant!r}")
         self.backend = backend
         self.autotune = autotune
         self.variant = variant
         self.noise_sigma = noise_sigma
+        self.warmup = warmup
         self._machine = machine
 
     def _make_machine(self, budget: Optional[float]):
@@ -218,8 +236,9 @@ class EngineSolver:
             m = self._machine
         else:
             dev = DeviceModel()
-            if budget:
-                dev = dc.replace(dev, anneal_sweeps=dev.anneal_sweeps * budget)
+            if budget is not None:
+                dev = dc.replace(dev, anneal_sweeps=dev.anneal_sweeps *
+                                 budget_factor(budget))
             m = IsingMachine(device=dev, backend=self.backend,
                              autotune=self.autotune)
             if self.variant == "gd":
@@ -249,7 +268,7 @@ class EngineSolver:
         rep = _bucketed_report(suite, self.name, runs, block, run_bucket,
                                meta={"variant": self.variant,
                                      "backend": self.backend},
-                               buckets=buckets)
+                               buckets=buckets, warmup=self.warmup)
         # Report the plan the biggest bucket ACTUALLY resolved to: with the
         # real J (int8 auto-select needs concrete levels) and the noise
         # variant's forced-scan feature flag.
@@ -271,10 +290,11 @@ class SAJaxSolver:
     bucketed batches as the engine. ``budget`` multiplies sweep count."""
 
     def __init__(self, n_sweeps: int = 200, beta0: float = 0.05,
-                 beta1: float = 4.0):
+                 beta1: float = 4.0, warmup: bool = False):
         self.n_sweeps = n_sweeps
         self.beta0 = beta0
         self.beta1 = beta1
+        self.warmup = warmup
 
     def solve(self, suite, runs: int = 64, seed: int = 0,
               budget: Optional[float] = None,
@@ -282,15 +302,17 @@ class SAJaxSolver:
         from ..solvers.sa_jax import simulated_annealing_jax_runs
         suite = as_suite(suite)
         _check_max_n(suite, self.caps, self.name, block)
-        sweeps = max(1, int(round(self.n_sweeps * (budget or 1.0))))
+        eff = search_effort(self.n_sweeps, runs, budget)
 
         def run_bucket(bucket, b_idx):
             return simulated_annealing_jax_runs(
-                bucket.J, n_runs=runs, n_sweeps=sweeps, beta0=self.beta0,
-                beta1=self.beta1, seed=seed + 7919 * b_idx)
+                bucket.J, n_runs=eff.restarts, n_sweeps=eff.iters,
+                beta0=self.beta0, beta1=self.beta1, seed=seed + 7919 * b_idx)
 
         return _bucketed_report(suite, self.name, runs, block, run_bucket,
-                                meta={"n_sweeps": sweeps})
+                                meta={"n_sweeps": eff.iters,
+                                      "effort": dataclasses.asdict(eff)},
+                                warmup=self.warmup)
 
 
 @register_solver("sa-numpy", needs_oracle=True, exact=False, device="numpy")
@@ -309,12 +331,12 @@ class SANumpySolver:
         from ..solvers.sa import simulated_annealing
         suite = as_suite(suite)
         _check_max_n(suite, self.caps, self.name, block)
-        sweeps = max(1, int(round(self.n_sweeps * (budget or 1.0))))
+        eff = search_effort(self.n_sweeps, runs, budget)
         energies, sigmas = [], []
         t0 = time.time()
         for i, p in enumerate(suite):
             e, s = simulated_annealing(
-                p.J_levels, n_sweeps=sweeps, n_restarts=runs,
+                p.J_levels, n_sweeps=eff.iters, n_restarts=eff.restarts,
                 beta0=self.beta0, beta1=self.beta1, seed=seed + 31 * i,
                 return_all=True)
             energies.append(np.asarray(e, dtype=np.float64))
@@ -324,14 +346,18 @@ class SANumpySolver:
             best_sigma=sigmas, problem_hashes=suite.hashes,
             sizes=suite.sizes, scales=tuple(p.scale for p in suite),
             wall_s=time.time() - t0, dispatches=len(suite),
-            meta={"n_sweeps": sweeps})
+            meta={"n_sweeps": eff.iters})
 
 
 @register_solver("tabu", needs_oracle=False, exact=False, device="numpy")
 class TabuSolver:
     """qbsolv-style tabu search — the paper's best-known oracle. ``runs``
     maps to independent restarts (per-restart energies reported); ``budget``
-    multiplies the per-restart iteration count (default 40*N)."""
+    multiplies the per-restart iteration count (default 40*N).
+
+    ``meta["iters_used"]`` records the flips each restart ACTUALLY applied
+    — a restart stops early when every move is tabu and none aspirates, so
+    charging it the full ``n_iters`` would overstate the search effort."""
 
     def __init__(self, tenure: Optional[int] = None):
         self.tenure = tenure
@@ -342,20 +368,119 @@ class TabuSolver:
         from ..solvers.tabu import tabu_search
         suite = as_suite(suite)
         _check_max_n(suite, self.caps, self.name, block)
-        energies, sigmas = [], []
+        energies, sigmas, iters_used, n_iters = [], [], [], []
         t0 = time.time()
         for i, p in enumerate(suite):
-            n_iters = max(1, int(round(40 * p.n * (budget or 1.0))))
-            e, s = tabu_search(p.J_levels, n_iters=n_iters, n_restarts=runs,
-                               tenure=self.tenure, seed=seed + 31 * i,
-                               return_all=True)
+            eff = search_effort(40 * p.n, runs, budget)
+            e, s, used = tabu_search(
+                p.J_levels, n_iters=eff.iters, n_restarts=eff.restarts,
+                tenure=self.tenure, seed=seed + 31 * i, return_all=True,
+                return_iters=True)
             energies.append(np.asarray(e, dtype=np.float64))
             sigmas.append(s[int(np.argmin(e))])
+            iters_used.append(used.tolist())
+            n_iters.append(eff.iters)
         return SolveReport(
             solver=self.name, runs=runs, energies=energies,
             best_sigma=sigmas, problem_hashes=suite.hashes,
             sizes=suite.sizes, scales=tuple(p.scale for p in suite),
-            wall_s=time.time() - t0, dispatches=len(suite), meta={})
+            wall_s=time.time() - t0, dispatches=len(suite),
+            meta={"n_iters": n_iters, "iters_used": iters_used})
+
+
+@register_solver("tabu-jax", needs_oracle=False, exact=False, device="jax")
+class TabuJaxSolver:
+    """The tabu oracle at machine batch scale: ``solvers.tabu_jax`` —
+    vmapped restarts × problems, ``lax.scan`` iterations, one dispatch per
+    pad bucket. Same algorithm and per-problem budgets as the numpy
+    ``tabu`` solver (``n_iters = 40 * N * budget``, tenure ``max(4, N //
+    4)``); padded spins are masked out of the candidate move set, so a
+    bucketed suite solves exactly the problems it contains.
+
+    ``meta["iters_used"]`` is honest per-restart effort (stalled restarts
+    stop early, exactly like numpy's ``break``)."""
+
+    def __init__(self, tenure: Optional[int] = None, warmup: bool = False):
+        self.tenure = tenure
+        self.warmup = warmup
+
+    def solve(self, suite, runs: int = 64, seed: int = 0,
+              budget: Optional[float] = None,
+              block: int = CHIP_BLOCK) -> SolveReport:
+        from ..solvers.tabu_jax import tabu_search_jax_runs
+        suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
+        efforts = [search_effort(40 * p.n, runs, budget) for p in suite]
+        restarts = efforts[0].restarts if efforts else max(1, runs)
+        used_by_problem = {}
+
+        def run_bucket(bucket, b_idx):
+            e, s, used = tabu_search_jax_runs(
+                bucket.J,
+                n_true=[suite[i].n for i in bucket.indices],
+                n_iters=[efforts[i].iters for i in bucket.indices],
+                n_restarts=restarts, tenure=self.tenure,
+                seed=seed + 7919 * b_idx)
+            for k, i in enumerate(bucket.indices):
+                used_by_problem[i] = used[k].tolist()
+            return e, s
+
+        rep = _bucketed_report(
+            suite, self.name, runs, block, run_bucket,
+            meta={"n_iters": [e.iters for e in efforts]},
+            warmup=self.warmup)
+        rep.meta["iters_used"] = [used_by_problem[i]
+                                  for i in range(len(suite))]
+        return rep
+
+
+@register_solver("pt-jax", needs_oracle=True, exact=False, device="jax")
+class PTJaxSolver:
+    """Replica-exchange parallel tempering (``solvers.pt_jax``) on the
+    shared Metropolis sweep kernel: K fixed temperature rungs per restart,
+    checkerboard neighbor swaps, everything vmapped — one dispatch per pad
+    bucket. ``runs`` is independent PT restarts (each reports its
+    across-rung best); ``budget`` multiplies the sweep count per the
+    uniform ``search_effort`` mapping; rungs are internal parallelism.
+
+    ``meta["swap_acceptances"]`` (mean per restart) is the mixing
+    diagnostic — 0 means the ladder is too steep to exchange."""
+
+    def __init__(self, n_sweeps: int = 120, n_rungs: int = 4,
+                 beta0: float = 0.05, beta1: float = 4.0,
+                 swap_every: int = 1, warmup: bool = False):
+        self.n_sweeps = n_sweeps
+        self.n_rungs = n_rungs
+        self.beta0 = beta0
+        self.beta1 = beta1
+        self.swap_every = swap_every
+        self.warmup = warmup
+
+    def solve(self, suite, runs: int = 64, seed: int = 0,
+              budget: Optional[float] = None,
+              block: int = CHIP_BLOCK) -> SolveReport:
+        from ..solvers.pt_jax import parallel_tempering_jax_runs
+        suite = as_suite(suite)
+        _check_max_n(suite, self.caps, self.name, block)
+        eff = search_effort(self.n_sweeps, runs, budget,
+                            rungs=self.n_rungs)
+        swaps_by_problem = {}
+
+        def run_bucket(bucket, b_idx):
+            e, s, swaps = parallel_tempering_jax_runs(
+                bucket.J, n_runs=eff.restarts, n_sweeps=eff.iters,
+                n_rungs=eff.rungs, beta0=self.beta0, beta1=self.beta1,
+                swap_every=self.swap_every, seed=seed + 7919 * b_idx)
+            for k, i in enumerate(bucket.indices):
+                swaps_by_problem[i] = float(np.mean(swaps[k]))
+            return e, s
+
+        rep = _bucketed_report(
+            suite, self.name, runs, block, run_bucket,
+            meta={"effort": dataclasses.asdict(eff)}, warmup=self.warmup)
+        rep.meta["swap_acceptances"] = [swaps_by_problem[i]
+                                        for i in range(len(suite))]
+        return rep
 
 
 @register_solver("chip-lns", needs_oracle=True, exact=False, device="jax")
@@ -378,11 +503,13 @@ class ChipLNSSolver:
 
     def __init__(self, backend: str = "auto", inner_runs: int = 8,
                  outer_sweeps: Optional[int] = None,
-                 anneal_sweeps: Optional[float] = None):
+                 anneal_sweeps: Optional[float] = None,
+                 warmup: bool = False):
         self.backend = backend
         self.inner_runs = inner_runs
         self.outer_sweeps = outer_sweeps
         self.anneal_sweeps = anneal_sweeps
+        self.warmup = warmup
 
     def _engine(self):
         import dataclasses as dc
@@ -400,7 +527,7 @@ class ChipLNSSolver:
               block: int = CHIP_BLOCK) -> SolveReport:
         from ..core.engine import BlockLNS, lns_blocks
         suite = as_suite(suite)
-        t0 = time.time()
+        wall = 0.0
         # Delegation threshold: the direct engine can only take what BOTH
         # the requested block and its own die cap allow — with block > 64
         # the oversized problems must still decompose, not bounce off the
@@ -412,32 +539,47 @@ class ChipLNSSolver:
         energies = [None] * len(suite)
         sigmas = [None] * len(suite)
         dispatches = 0
+        compile_s = 0.0
         meta = {"block": block, "inner_runs": self.inner_runs,
                 "lns_problems": big}
 
         if small:
             sub = ProblemSuite([suite[i] for i in small])
-            rep = EngineSolver(backend=self.backend).solve(
+            rep = EngineSolver(backend=self.backend,
+                               warmup=self.warmup).solve(
                 sub, runs=runs, seed=seed, budget=None, block=delegate_n)
             for k, i in enumerate(small):
                 energies[i] = rep.energies[k]
                 sigmas[i] = rep.best_sigma[k]
             dispatches += rep.dispatches
+            compile_s += rep.compile_s
+            wall += rep.wall_s
             meta["engine_plan"] = rep.meta.get("engine_plan")
 
         if big:
             n_blocks = max(len(lns_blocks(suite[i].n, delegate_n - 1))
                            for i in big)
             outer = self.outer_sweeps or max(4, 2 * n_blocks)
-            outer = max(1, int(round(outer * (budget or 1.0))))
+            outer = search_effort(outer, runs, budget).iters
             # the die is delegate_n, never the (possibly larger) pad block:
             # block=128 must decompose onto real 64-spin dies, not anneal a
             # 128-spin virtual chip the capability check exists to forbid
             lns = BlockLNS(self._engine(), chip_block=delegate_n,
                            inner_runs=self.inner_runs)
-            results, d = lns.solve(
-                [suite[i].J_levels.astype(np.float64) for i in big],
-                restarts=runs, outer_sweeps=outer, seed=seed + 104729)
+            big_J = [suite[i].J_levels.astype(np.float64) for i in big]
+            if self.warmup:
+                # same compile/steady split as _bucketed_report: pay the
+                # trace on a discarded identical solve (deterministic
+                # seed), time the second
+                tw = time.time()
+                lns.solve(big_J, restarts=runs, outer_sweeps=outer,
+                          seed=seed + 104729)
+                t_first = time.time() - tw
+            t0 = time.time()
+            results, d = lns.solve(big_J, restarts=runs,
+                                   outer_sweeps=outer, seed=seed + 104729)
+            if self.warmup:
+                compile_s += max(0.0, t_first - (time.time() - t0))
             dispatches += d
             meta["outer_sweeps"] = outer
             meta["init_energies"] = {}
@@ -445,19 +587,25 @@ class ChipLNSSolver:
                 energies[i] = e
                 sigmas[i] = s[int(np.argmin(e))]
                 meta["init_energies"][i] = e0.tolist()
+            wall += time.time() - t0
 
+        # wall accumulates the component solve times, so warmup compile
+        # paid inside the engine delegation is never charged to the solve
         return SolveReport(
             solver=self.name, runs=runs, energies=energies,
             best_sigma=sigmas, problem_hashes=suite.hashes,
             sizes=suite.sizes, scales=tuple(p.scale for p in suite),
-            wall_s=time.time() - t0, dispatches=dispatches, meta=meta)
+            wall_s=wall, compile_s=compile_s, dispatches=dispatches,
+            meta=meta)
 
 
 @register_solver("brute-force", needs_oracle=False, exact=True,
-                 device="numpy", max_n=24)
+                 device="numpy", max_n=BRUTE_FORCE_MAX_N)
 class BruteForceSolver:
-    """Exhaustive exact minimum (N <= 24). ``runs``/``budget`` ignored —
-    energies has one entry per problem, and it is the ground truth."""
+    """Exhaustive exact minimum (``N <= BRUTE_FORCE_MAX_N`` — the same
+    shared constant the oracle cache's exact tier cuts over at).
+    ``runs``/``budget`` ignored — energies has one entry per problem, and
+    it is the ground truth."""
 
     def solve(self, suite, runs: int = 1, seed: int = 0,
               budget: Optional[float] = None,

@@ -30,7 +30,8 @@ class SolveReport:
     problem_hashes: tuple                     # content hashes (oracle keys)
     sizes: tuple                              # true spin counts
     scales: tuple                             # level -> physical multipliers
-    wall_s: float = 0.0
+    wall_s: float = 0.0                       # steady-state solve time
+    compile_s: float = 0.0                    # one-time XLA compile/trace
     dispatches: int = 0                       # device batches issued
     meta: dict = dataclasses.field(default_factory=dict)
     best_known: Optional[np.ndarray] = None   # (P,) level units
@@ -51,6 +52,9 @@ class SolveReport:
 
     @property
     def anneals_per_s(self) -> float:
+        """Throughput against ``wall_s`` only: solvers run with warmup
+        split one-time XLA compilation into ``compile_s``, so this stops
+        charging trace/compile time to the steady-state solve rate."""
         total = sum(np.size(e) for e in self.energies)
         return total / max(self.wall_s, 1e-9)
 
@@ -110,6 +114,7 @@ class SolveReport:
             sizes=self.sizes + other.sizes,
             scales=self.scales + other.scales,
             wall_s=self.wall_s + other.wall_s,
+            compile_s=self.compile_s + other.compile_s,
             dispatches=self.dispatches + other.dispatches,
             meta={**other.meta, **self.meta}, best_known=bk)
 
@@ -128,6 +133,7 @@ class SolveReport:
             "best_sigma": [np.asarray(s, dtype=int).tolist()
                            for s in self.best_sigma],
             "wall_s": float(self.wall_s),
+            "compile_s": float(self.compile_s),
             "dispatches": int(self.dispatches),
             "anneals_per_s": float(self.anneals_per_s),
             "meta": _jsonable(self.meta),
@@ -142,10 +148,12 @@ class SolveReport:
         return out
 
     def summary(self) -> str:
+        compile_note = (f" + compile {self.compile_s:.2f}s"
+                        if self.compile_s > 0 else "")
         lines = [f"[{self.solver}] {self.num_problems} problems "
                  f"(N={sorted(set(self.sizes))}), {self.runs} runs, "
-                 f"{self.dispatches} dispatches, wall {self.wall_s:.2f}s "
-                 f"({self.anneals_per_s:.0f} anneals/s)"]
+                 f"{self.dispatches} dispatches, wall {self.wall_s:.2f}s"
+                 f"{compile_note} ({self.anneals_per_s:.0f} anneals/s)"]
         with np.printoptions(precision=3, suppress=True):
             lines.append(f"  best energy : {self.best_energy}")
             if self.best_known is not None:

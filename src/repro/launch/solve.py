@@ -11,12 +11,20 @@
     PYTHONPATH=src python -m repro.launch.solve --solver tabu \
         --workload mis --spins 12 --runs 32
 
+    # the classical search tier at machine batch scale: tabu-jax is the
+    # best-known oracle vmapped over restarts x problems (one dispatch per
+    # pad bucket), pt-jax is replica-exchange parallel tempering
+    PYTHONPATH=src python -m repro.launch.solve --solver tabu-jax \
+        --spins 48 --problems 8 --runs 64
+
 Any registered solver (``--list-solvers``) runs behind the same
 Problem/Suite/Report surface; the best-known oracle is disk-cached by
-problem content hash (``--no-cache`` bypasses). Single-die solvers declare
-``max_n`` and reject suites past one 64-spin block — ``chip-lns``
-decomposes larger instances onto the same engine. Zoo workloads decode the
-best configuration back to native form and verify it (``repro.workloads``).
+problem content hash (``--no-cache`` bypasses) and refreshed by the
+batched on-device tabu-jax tier above the brute-force range. Single-die
+solvers declare ``max_n`` and reject suites past one 64-spin block —
+``chip-lns`` decomposes larger instances onto the same engine. Zoo
+workloads decode the best configuration back to native form and verify it
+(``repro.workloads``).
 """
 from __future__ import annotations
 
@@ -98,9 +106,11 @@ def main():
     ap.add_argument("--problems", type=int, default=4)
     ap.add_argument("--runs", type=int, default=256)
     ap.add_argument("--budget", type=float, default=None,
-                    help="solver-relative effort multiplier (anneal length "
-                         "for engine, outer sweeps for chip-lns, sweeps for "
-                         "SA, iterations for tabu)")
+                    help="effort multiplier, mapped uniformly by "
+                         "api.budget.search_effort: scales per-restart "
+                         "iterations (anneal length for engine, outer "
+                         "sweeps for chip-lns, sweeps for SA/PT, flips "
+                         "for tabu), never the restart count")
     ap.add_argument("--backend", choices=["jnp", "pallas", "auto"],
                     default="auto",
                     help="[engine/chip-lns] AnnealEngine path: jnp=scan, "

@@ -1,8 +1,13 @@
-from .brute_force import brute_force_ground_state
+from .brute_force import BRUTE_FORCE_MAX_N, brute_force_ground_state
 from .tabu import tabu_search, best_known
+from .tabu_jax import tabu_search_jax, tabu_search_jax_runs
 from .sa import simulated_annealing
-from .sa_jax import simulated_annealing_jax, simulated_annealing_jax_runs
+from .sa_jax import (metropolis_sweep, simulated_annealing_jax,
+                     simulated_annealing_jax_runs)
+from .pt_jax import beta_ladder, parallel_tempering_jax_runs
 
-__all__ = ["brute_force_ground_state", "tabu_search", "best_known",
-           "simulated_annealing", "simulated_annealing_jax",
-           "simulated_annealing_jax_runs"]
+__all__ = ["BRUTE_FORCE_MAX_N", "brute_force_ground_state", "tabu_search",
+           "best_known", "tabu_search_jax", "tabu_search_jax_runs",
+           "simulated_annealing", "metropolis_sweep",
+           "simulated_annealing_jax", "simulated_annealing_jax_runs",
+           "beta_ladder", "parallel_tempering_jax_runs"]

@@ -3,8 +3,15 @@ from __future__ import annotations
 
 import numpy as np
 
+#: THE exact-tier boundary, shared by the brute-force solver's capability
+#: flag (``subset_max_n``) and the oracle cache's brute-force tier — they
+#: used to disagree (24 vs 20), so N = 21..24 problems got a heuristic
+#: best-known even though exhaustive search was declared feasible.
+BRUTE_FORCE_MAX_N = 24
 
-def brute_force_ground_state(J, max_n: int = 24, chunk: int = 1 << 16):
+
+def brute_force_ground_state(J, max_n: int = BRUTE_FORCE_MAX_N,
+                             chunk: int = 1 << 16):
     """Exact minimum of H = -0.5 s'Js over s in {-1,+1}^N (N <= max_n).
 
     Exploits Z2 symmetry (s and -s degenerate): fixes s_0 = +1, halving the

@@ -26,34 +26,49 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _sa_single(J, key, betas):
-    """One restart: anneal a single spin vector. J (n,n), betas (T,)."""
+def random_init_state(J, key):
+    """Uniform ±1 spins plus consistent local fields / energy. J (n,n)."""
     n = J.shape[-1]
-    k_init, k_run = jax.random.split(key)
-    s = jnp.where(jax.random.bernoulli(k_init, 0.5, (n,)), 1.0, -1.0)
+    s = jnp.where(jax.random.bernoulli(key, 0.5, (n,)), 1.0, -1.0)
     f = J @ s                                    # (n,) local fields
     e = -0.5 * jnp.dot(s, f)
+    return s, f, e
+
+
+def metropolis_sweep(J, s, f, e, beta, key):
+    """One Metropolis sweep (random spin order, O(N) incremental field
+    updates) at inverse temperature ``beta``. The shared single-rung kernel:
+    SA scans it over a beta schedule, parallel tempering (``solvers.pt_jax``)
+    vmaps it over a fixed temperature ladder. Returns updated (s, f, e)."""
+    n = J.shape[-1]
+    k_ord, k_u = jax.random.split(key)
+    order = jax.random.permutation(k_ord, n)
+    u = jax.random.uniform(k_u, (n,))
+
+    def flip(i, st):
+        s, f, e = st
+        k = order[i]
+        dH = 2.0 * s[k] * f[k]
+        accept = (dH <= 0.0) | (u[i] < jnp.exp(-beta *
+                                               jnp.maximum(dH, 0.0)))
+        upd = jnp.where(accept, -2.0 * s[k], 0.0)        # change in s_k
+        f = f + upd * J[:, k]
+        s = s.at[k].set(jnp.where(accept, -s[k], s[k]))
+        e = e + jnp.where(accept, dH, 0.0)
+        return (s, f, e)
+
+    return jax.lax.fori_loop(0, n, flip, (s, f, e))
+
+
+def _sa_single(J, key, betas):
+    """One restart: anneal a single spin vector. J (n,n), betas (T,)."""
+    k_init, k_run = jax.random.split(key)
+    s, f, e = random_init_state(J, k_init)
 
     def sweep(carry, inp):
         s, f, e, best_e, best_s = carry
         beta, kk = inp
-        k_ord, k_u = jax.random.split(kk)
-        order = jax.random.permutation(k_ord, n)
-        u = jax.random.uniform(k_u, (n,))
-
-        def flip(i, st):
-            s, f, e = st
-            k = order[i]
-            dH = 2.0 * s[k] * f[k]
-            accept = (dH <= 0.0) | (u[i] < jnp.exp(-beta *
-                                                   jnp.maximum(dH, 0.0)))
-            upd = jnp.where(accept, -2.0 * s[k], 0.0)    # change in s_k
-            f = f + upd * J[:, k]
-            s = s.at[k].set(jnp.where(accept, -s[k], s[k]))
-            e = e + jnp.where(accept, dH, 0.0)
-            return (s, f, e)
-
-        s, f, e = jax.lax.fori_loop(0, n, flip, (s, f, e))
+        s, f, e = metropolis_sweep(J, s, f, e, beta, kk)
         better = e < best_e
         best_e = jnp.where(better, e, best_e)
         best_s = jnp.where(better, s, best_s)

@@ -1,0 +1,284 @@
+"""On-device classical search tier: tabu-jax + pt-jax.
+
+Covers the contract the registry and oracle rely on: best-energy parity
+with the numpy oracle / brute force on converged problems, one dispatch
+per pad bucket, seed determinism of per-restart energies, honest
+iteration accounting (the stall ``break`` bugfix), the batched oracle
+refresh, the shared brute-force tier constant, the uniform budget
+mapping, and the compile/steady-state wall split.
+"""
+import numpy as np
+import pytest
+
+import repro.api.oracle as oracle_mod
+from repro.api import (Problem, ProblemSuite, best_known_energies,
+                       get_solver, search_effort)
+from repro.problems import problem_set
+from repro.solvers import (BRUTE_FORCE_MAX_N, brute_force_ground_state,
+                           parallel_tempering_jax_runs, tabu_search,
+                           tabu_search_jax, tabu_search_jax_runs)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+def test_tabu_jax_matches_numpy_and_brute_force():
+    ps = problem_set(16, 0.5, 2, seed=3)
+    for p in range(2):
+        J = np.asarray(ps.J[p])
+        e_bf, _ = brute_force_ground_state(J)
+        e_np, _ = tabu_search(J, n_restarts=16, seed=1)
+        e_jx, s_jx = tabu_search_jax(J, n_restarts=16, seed=1)
+        assert e_np == e_jx == pytest.approx(e_bf)
+        # returned sigma actually attains the returned energy
+        f = J @ s_jx.astype(np.float64)
+        assert -0.5 * float(s_jx @ f) == pytest.approx(e_jx)
+
+
+def test_tabu_jax_parity_mode_replicates_numpy_semantics():
+    # patience=0 disables kicks: pure numpy-oracle semantics, still exact
+    J = np.asarray(problem_set(16, 0.5, 1, seed=3).J[0])
+    e_bf, _ = brute_force_ground_state(J)
+    e, _, _ = tabu_search_jax_runs(J, n_restarts=16, seed=1, patience=0)
+    assert e.min() == pytest.approx(e_bf)
+
+
+def test_tabu_jax_padded_bucket_is_exact():
+    # zero-padding must not change the search: a padded spin's zero-dH
+    # flip would otherwise beat every worsening escape move
+    ps = problem_set(16, 0.5, 2, seed=7)
+    Jp = np.zeros((2, 48, 48), np.float32)
+    for p in range(2):
+        Jp[p, :16, :16] = ps.J[p]
+    e, s, _ = tabu_search_jax_runs(Jp, n_true=[16, 16], n_restarts=16,
+                                   seed=2)
+    for p in range(2):
+        e_bf, _ = brute_force_ground_state(np.asarray(ps.J[p]))
+        assert e[p].min() == pytest.approx(e_bf)
+    assert np.all(s[:, :, 16:] == 1)     # padded spins never touched
+
+
+def test_pt_jax_matches_brute_force():
+    ps = problem_set(16, 0.5, 2, seed=5)
+    e, s, swaps = parallel_tempering_jax_runs(
+        np.asarray(ps.J), n_runs=8, n_sweeps=80, n_rungs=4, seed=0)
+    assert e.shape == (2, 8) and s.shape == (2, 8, 16)
+    for p in range(2):
+        e_bf, _ = brute_force_ground_state(np.asarray(ps.J[p]))
+        assert e[p].min() == pytest.approx(e_bf)
+        k = int(np.argmin(e[p]))
+        sig = s[p, k].astype(np.float64)
+        assert -0.5 * sig @ np.asarray(ps.J[p], np.float64) @ sig \
+            == pytest.approx(e[p, k])
+    assert swaps.sum() > 0               # the ladder actually exchanges
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_tabu_jax_seed_determinism():
+    # budgets short enough that restarts DON'T all converge — per-restart
+    # energies then fingerprint the trajectory, not just the optimum
+    J = np.asarray(problem_set(24, 0.5, 2, seed=9).J)
+    a = tabu_search_jax_runs(J, n_iters=12, n_restarts=8, seed=4)
+    b = tabu_search_jax_runs(J, n_iters=12, n_restarts=8, seed=4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = tabu_search_jax_runs(J, n_iters=12, n_restarts=8, seed=5)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_pt_jax_seed_determinism():
+    J = np.asarray(problem_set(20, 0.5, 1, seed=2).J)
+    a = parallel_tempering_jax_runs(J, n_runs=6, n_sweeps=3, seed=3)
+    b = parallel_tempering_jax_runs(J, n_runs=6, n_sweeps=3, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = parallel_tempering_jax_runs(J, n_runs=6, n_sweeps=3, seed=4)
+    assert not np.array_equal(a[0], c[0])
+
+
+# ---------------------------------------------------------------------------
+# honest iteration accounting (the stall-break bugfix)
+# ---------------------------------------------------------------------------
+
+def test_stalled_restarts_report_truncated_iterations():
+    # tenure >> n: after ~n flips every move is tabu and none aspirates —
+    # numpy breaks, jax (parity mode) latches; both must REPORT it
+    J = np.asarray(problem_set(8, 0.9, 1, seed=6).J[0])
+    n_iters = 200
+    _, _, used_np = tabu_search(J, n_iters=n_iters, n_restarts=8,
+                                tenure=10_000, seed=3, return_all=True,
+                                return_iters=True)
+    _, _, used_jx = tabu_search_jax_runs(J, n_iters=n_iters, n_restarts=8,
+                                         tenure=10_000, seed=3, patience=0)
+    for used in (used_np, used_jx[0]):
+        assert np.all(used < n_iters)    # every restart stalled early
+        assert np.all(used >= 1)
+
+
+def test_registry_tabu_solvers_record_iters_used():
+    suite = ProblemSuite.random(12, 0.5, 2, seed=4)
+    for name in ("tabu", "tabu-jax"):
+        rep = get_solver(name).solve(suite, runs=4, seed=0, block=16)
+        used = rep.meta["iters_used"]
+        assert len(used) == 2 and all(len(u) == 4 for u in used)
+        assert all(0 < u <= ni for us, ni in zip(used, rep.meta["n_iters"])
+                   for u in us)
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+
+def test_one_dispatch_per_bucket_on_mixed_suite():
+    suite = ProblemSuite([Problem.random_qubo(16, 0.5, seed=1),
+                          Problem.random_qubo(64, 0.5, seed=2),
+                          Problem.random_qubo(70, 0.5, seed=3)])
+    assert suite.num_dispatches() == 2   # one 64-pad + one 128-pad bucket
+    for name in ("tabu-jax", "pt-jax"):
+        rep = get_solver(name).solve(suite, runs=4, seed=0, budget=0.25)
+        assert rep.dispatches == suite.num_dispatches(), name
+        assert rep.num_problems == 3
+        for i, p in enumerate(suite):
+            s = rep.best_sigma[i].astype(np.float64)
+            assert s.shape == (p.n,)
+            e = -0.5 * s @ p.J_levels.astype(np.float64) @ s
+            assert np.isclose(e, rep.best_energy[i]), name
+
+
+# ---------------------------------------------------------------------------
+# oracle: batched tabu-jax tier + shared brute-force boundary
+# ---------------------------------------------------------------------------
+
+def test_oracle_refresh_is_one_batched_dispatch(tmp_path, monkeypatch):
+    # 6 mixed-size problems, all above the exact tier, all padding to one
+    # 64-spin bucket: the WHOLE refresh must be a single device call
+    path = str(tmp_path / "oracle.json")
+    suite = ProblemSuite([Problem.random_qubo(n, 0.5, seed=n)
+                          for n in (25, 28, 32, 40, 48, 64)])
+    calls = []
+    orig = oracle_mod._tabu_jax_batch
+
+    def counting(J, n_true, seed):
+        calls.append(np.asarray(J).shape)
+        return orig(J, n_true, seed)
+
+    with monkeypatch.context() as mp:
+        mp.setattr(oracle_mod, "_tabu_jax_batch", counting)
+        bk = best_known_energies(suite, path=path)
+        assert len(calls) == 1 and calls[0] == (6, 64, 64)
+        # pure cache hits afterwards — no second dispatch
+        np.testing.assert_array_equal(
+            best_known_energies(suite, path=path), bk)
+        assert len(calls) == 1
+    import json
+    entries = json.load(open(path))
+    assert set(entries) == set(suite.hashes)
+    assert all(e["method"] == "tabu-jax" for e in entries.values())
+    # the oracle energies are real: a direct tabu-jax solve can't beat them
+    rep = get_solver("tabu-jax").solve(suite, runs=16, seed=123)
+    assert np.all(bk <= rep.best_energy + 1e-9)
+
+
+def test_stale_heuristic_entry_inside_exact_tier_is_recomputed(tmp_path):
+    # entries cached under the OLD 20-spin boundary carry method='tabu'
+    # for 20 < N <= 24; they may sit above the true ground state and must
+    # not be served as best-known now that the exact tier covers them
+    import json
+    path = tmp_path / "oracle.json"
+    p = Problem.random_qubo(21, 0.5, seed=9)
+    bk = best_known_energies(ProblemSuite([p]), path=str(path))
+    stale = json.load(open(path))
+    stale[p.content_hash] = {"energy": float(bk[0]) + 30.0, "method": "tabu",
+                             "n": 21, "kind": p.kind}
+    json.dump(stale, open(path, "w"))
+    out = best_known_energies(ProblemSuite([p]), path=str(path))
+    np.testing.assert_array_equal(out, bk)       # recomputed exactly
+    entry = json.load(open(path))[p.content_hash]
+    assert entry["method"] == "brute_force" and entry["energy"] == bk[0]
+
+
+def test_brute_force_tier_boundary_is_one_shared_constant():
+    from repro.solvers.brute_force import BRUTE_FORCE_MAX_N as solver_const
+    assert oracle_mod.BRUTE_FORCE_MAX_N == solver_const
+    assert get_solver("brute-force").caps.max_n == solver_const
+    # method actually switches at the shared boundary
+    import json
+    import tempfile, os
+    small = Problem.random_qubo(22, 0.5, seed=1)    # 20 < 22 <= 24: exact now
+    big = Problem.random_qubo(solver_const + 2, 0.5, seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "o.json")
+        best_known_energies(ProblemSuite([small, big]), path=path)
+        methods = {e["n"]: e["method"]
+                   for e in json.load(open(path)).values()}
+        assert methods[22] == "brute_force"
+        assert methods[solver_const + 2] == "tabu-jax"
+
+
+# ---------------------------------------------------------------------------
+# uniform budget mapping
+# ---------------------------------------------------------------------------
+
+def test_search_effort_mapping():
+    eff = search_effort(200, 32, budget=None)
+    assert (eff.iters, eff.restarts, eff.rungs) == (200, 32, 1)
+    eff = search_effort(200, 32, budget=0.5, rungs=4)
+    assert (eff.iters, eff.restarts, eff.rungs) == (100, 32, 4)
+    assert eff.total_iters == 100 * 32 * 4
+    assert search_effort(2, 1, budget=0.01).iters == 1   # floored, never 0
+    with pytest.raises(ValueError):
+        search_effort(100, 8, budget=-1.0)
+    with pytest.raises(ValueError):
+        search_effort(100, 8, budget=0.0)
+
+
+def test_budget_scales_iters_not_restarts():
+    suite = ProblemSuite.random(12, 0.5, 1, seed=8)
+    full = get_solver("tabu-jax").solve(suite, runs=6, seed=0, block=16)
+    half = get_solver("tabu-jax").solve(suite, runs=6, seed=0, budget=0.5,
+                                        block=16)
+    assert half.meta["n_iters"][0] == full.meta["n_iters"][0] // 2
+    assert half.runs == full.runs == 6
+    assert all(len(e) == 6 for e in half.energies)
+
+
+# ---------------------------------------------------------------------------
+# perf metrology: compile/steady-state split
+# ---------------------------------------------------------------------------
+
+def test_warmup_splits_compile_from_wall():
+    # unusual shape => fresh XLA compile; warmup must charge it to
+    # compile_s, leaving wall_s as the steady-state dispatch time
+    suite = ProblemSuite.random(13, 0.5, 2, seed=6)
+    rep = get_solver("tabu-jax", warmup=True).solve(suite, runs=4, seed=0,
+                                                    block=13)
+    assert rep.compile_s > 0
+    assert rep.wall_s < rep.compile_s    # tiny steady solve vs trace+compile
+    payload = rep.to_json()
+    assert payload["compile_s"] == rep.compile_s
+    assert payload["anneals_per_s"] == pytest.approx(
+        sum(np.size(e) for e in rep.energies) / rep.wall_s)
+    # numpy solvers never pay XLA compile
+    rep_np = get_solver("sa-numpy").solve(suite, runs=4, seed=0)
+    assert rep_np.compile_s == 0.0
+    # merge accumulates both clocks
+    merged = rep.merge(rep)
+    assert merged.compile_s == pytest.approx(2 * rep.compile_s)
+
+
+def test_chip_lns_warmup_covers_decomposition_path():
+    # past one die the LNS branch compiles too — warmup must keep that
+    # out of wall_s just like the bucketed solvers do
+    suite = ProblemSuite([Problem.random_qubo(70, 0.4, seed=2)])
+    rep = get_solver("chip-lns", warmup=True, inner_runs=2,
+                     outer_sweeps=2, anneal_sweeps=0.37).solve(
+        suite, runs=2, seed=0)
+    assert rep.compile_s > 0
+    cold = get_solver("chip-lns", inner_runs=2, outer_sweeps=2,
+                      anneal_sweeps=0.37).solve(suite, runs=2, seed=0)
+    assert cold.compile_s == 0.0
+    np.testing.assert_array_equal(rep.best_energy, cold.best_energy)
