@@ -1,0 +1,154 @@
+"""Serve-vs-offline throughput: the continuous-batching service against
+the one-shot ``solve(suite)`` path on the same mixed 16/32/64-spin stream.
+
+Three phases, one shared problem stream (a pool of distinct instances
+sampled with repetition — the serving regime):
+
+  * **offline** — the whole stream as one ``ProblemSuite`` solve, warmed:
+    the batch-harness upper bound (zero queueing, perfect batching).
+  * **burst** (result cache off) — every request submitted to the service
+    at once; the dynamic batcher must coalesce them into the same pad
+    buckets the offline path builds. Ratio to offline measures pure
+    batching/queueing overhead.
+  * **stream** (cache on) — closed-loop clients for a few seconds: the
+    sustained regime, with realistic p50/p95 latency and the repeated
+    problems served from the content-hash cache without a dispatch.
+
+Writes ``BENCH_serve.json`` at the repo root (CI archives it) with
+problems/s for each phase, p50/p95 latency, cache hit rate, and the
+coalescing ledger. Two hard gates make it a CI check, not just a report:
+the batcher may never issue more device dispatches than coalesced pad
+buckets (one dispatch per flush), and resubmitting the stream must be
+served entirely from the result cache.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.api import ProblemSuite, get_solver
+from repro.launch.serve_ising import build_pool, run_load
+from repro.serve import IsingService
+
+from .common import csv_line, record, write_root_bench
+
+SOLVER = "sa-jax"
+
+
+def _make_stream(sizes, density, pool_size, length, seed):
+    pool = build_pool(sizes, density, pool_size, seed=seed)
+    rng = random.Random(seed + 1)
+    return pool, [rng.choice(pool) for _ in range(length)]
+
+
+def run(full: bool = False):
+    t_start = time.time()
+    sizes = (16, 32, 64)
+    pool_size, length, runs = (12, 96, 64) if full else (6, 18, 16)
+    stream_s = 10.0 if full else 3.0
+    seed = 515
+    pool, stream = _make_stream(sizes, 0.5, pool_size, length, seed)
+
+    # -- offline upper bound (warmed: the service pays compile once too) --
+    suite = ProblemSuite(stream)
+    solver = get_solver(SOLVER)
+    solver.solve(suite, runs=runs, seed=seed)          # warm the XLA cache
+    t0 = time.time()
+    off_rep = solver.solve(suite, runs=runs, seed=seed)
+    offline_s = time.time() - t0
+    offline_pps = len(stream) / offline_s
+
+    # -- burst through the service, cache off: batching overhead ----------
+    # max_wait_s is generous so the whole burst coalesces into ONE flush —
+    # that is what makes the energy-parity check against the offline suite
+    # solve exact (same bucket composition, same per-position RNG streams)
+    with IsingService(solver=SOLVER, runs=runs, seed=seed, cache=False,
+                      max_batch=len(stream), max_wait_s=0.5) as svc:
+        t0 = time.time()
+        tickets = svc.submit_many(stream)
+        results = [t.result(timeout=600) for t in tickets]
+        burst_s = time.time() - t0
+        burst_stats = svc.stats()
+    burst_pps = len(stream) / burst_s
+    if burst_stats["dispatches"] > burst_stats["flushes"]:
+        raise RuntimeError(
+            f"continuous batcher regressed: {burst_stats['dispatches']} "
+            f"device dispatches for {burst_stats['flushes']} coalesced pad "
+            f"buckets — the one-dispatch-per-flush contract broke")
+    # burst results must equal the offline solve of the same stream
+    for i, res in enumerate(results):
+        if abs(res.best_energy - float(off_rep.best_energy[i])) > 1e-9:
+            raise RuntimeError(
+                f"serve/offline divergence on stream[{i}]: "
+                f"{res.best_energy} != {off_rep.best_energy[i]}")
+
+    # -- sustained closed-loop stream, cache on ----------------------------
+    with IsingService(solver=SOLVER, runs=runs, seed=seed, cache=True,
+                      max_batch=32, max_wait_s=0.02) as svc:
+        # prime: one pass over the pool so every instance is cached — the
+        # closed-loop phase then measures the sustained serving regime and
+        # the resubmit gate below is deterministic
+        for t in svc.submit_many(pool):
+            t.result(timeout=600)
+        # stream metrics are DELTAS over the closed-loop window, so the
+        # priming pass (and its XLA compile time) never pollutes the
+        # sustained problems/s or hit-rate figures
+        pre = svc.stats()
+        t0 = time.time()
+        stream_stats = run_load(svc, pool, clients=4, duration_s=stream_s,
+                                seed=seed + 2, live=False)
+        window_s = time.time() - t0
+        stream_pps = ((stream_stats["completed"] - pre["completed"])
+                      / max(window_s, 1e-9))
+        stream_hit = ((stream_stats["cache_hits"] - pre["cache_hits"])
+                      / max(stream_stats["submitted"] - pre["submitted"], 1))
+        if svc.stats()["dispatches"] > svc.stats()["flushes"]:
+            raise RuntimeError("streaming phase exceeded one dispatch per "
+                               "coalesced bucket")
+        # resubmitting the pool must be pure cache hits (no new dispatch)
+        before = svc.stats()["dispatches"]
+        for p in pool:
+            svc.submit(p).result(timeout=600)
+        after = svc.stats()
+        if after["dispatches"] != before:
+            raise RuntimeError("repeated problems dispatched instead of "
+                               "hitting the content-hash result cache")
+
+    payload = {
+        "solver": SOLVER, "sizes": list(sizes), "runs": runs,
+        "pool": pool_size, "stream_len": length,
+        "offline_problems_per_s": offline_pps,
+        "burst_problems_per_s": burst_pps,
+        "burst_over_offline": burst_pps / offline_pps,
+        "burst_flushes": burst_stats["flushes"],
+        "burst_dispatches": burst_stats["dispatches"],
+        "suite_dispatch_buckets": suite.num_dispatches(),
+        "stream_problems_per_s": stream_pps,
+        "p50_latency_s": stream_stats["p50_latency_s"],
+        "p95_latency_s": stream_stats["p95_latency_s"],
+        "cache_hit_rate": stream_hit,
+        "mean_batch": stream_stats["mean_batch"],
+    }
+    record("serve_throughput", payload)
+    write_root_bench("BENCH_serve.json", payload)
+
+    us = (time.time() - t_start) * 1e6 / max(len(stream), 1)
+    print(csv_line(
+        "serve_throughput", us,
+        f"offline={offline_pps:.1f}/s;burst={burst_pps:.1f}/s"
+        f"(x{burst_pps / offline_pps:.2f});"
+        f"stream={stream_pps:.1f}/s;"
+        f"p95={stream_stats['p95_latency_s'] * 1e3:.0f}ms;"
+        f"hit={stream_hit:.2f}"))
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (the default is already modest; "
+                         "--full restores paper-scale streams)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full and not args.quick)

@@ -7,7 +7,7 @@ decode through the KV-cache path (the serve_step the dry-run lowers at
 """
 import argparse
 
-from repro.launch.serve import serve
+from repro.launch.serve_lm import serve
 
 
 def main():

@@ -10,17 +10,21 @@ See API.md for the full tour (bucketing semantics, solver registry,
 capability flags, oracle cache).
 """
 from .problem import MAX_LEVEL, Problem
-from .suite import CHIP_BLOCK, Bucket, ProblemSuite, padded_size
+from .batching import (CHIP_BLOCK, BatchPlan, Bucket, pad_stack,
+                       padded_size, plan_buckets)
+from .suite import ProblemSuite
 from .report import SolveReport
-from .budget import SearchEffort, budget_factor, search_effort
+from .budget import (SearchEffort, budget_factor, deadline_to_budget,
+                     search_effort)
 from .oracle import (BRUTE_FORCE_MAX_N, best_known_energies,
                      cache_path as oracle_cache_path, reconcile_best_known)
 from .registry import (Solver, SolverCaps, as_suite, get_solver,
                        list_solvers, register_solver, solve_suite)
 
 __all__ = [
-    "MAX_LEVEL", "Problem", "CHIP_BLOCK", "Bucket", "ProblemSuite",
-    "padded_size", "SolveReport", "SearchEffort", "budget_factor",
+    "MAX_LEVEL", "Problem", "CHIP_BLOCK", "BatchPlan", "Bucket",
+    "ProblemSuite", "pad_stack", "padded_size", "plan_buckets",
+    "SolveReport", "SearchEffort", "budget_factor", "deadline_to_budget",
     "search_effort", "BRUTE_FORCE_MAX_N", "best_known_energies",
     "oracle_cache_path", "reconcile_best_known",
     "Solver", "SolverCaps", "as_suite", "get_solver", "list_solvers",

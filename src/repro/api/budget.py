@@ -53,3 +53,28 @@ def search_effort(base_iters: float, runs: int,
     return SearchEffort(
         iters=max(1, int(round(base_iters * budget_factor(budget)))),
         restarts=max(1, int(runs)), rungs=max(1, int(rungs)))
+
+
+def deadline_to_budget(deadline_s: Optional[float],
+                       reference_s: float = 1.0,
+                       min_budget: float = 0.125,
+                       max_budget: float = 8.0) -> Optional[float]:
+    """Map a per-request latency deadline to the uniform effort multiplier.
+
+    The serve tier's admission contract: a request that allows
+    ``reference_s`` of solve time gets the solver's nominal effort
+    (budget 1.0); tighter deadlines scale the per-restart iteration budget
+    down linearly (work is linear in iters for every registered solver),
+    looser ones scale it up. The clamp keeps one outlier request from
+    driving a shared batch to degenerate (or unbounded) effort, and the
+    result then flows through :func:`search_effort` exactly like a
+    user-passed ``budget``. ``None`` (no deadline) means nominal effort.
+    """
+    if deadline_s is None:
+        return None
+    deadline_s = float(deadline_s)
+    if deadline_s <= 0:
+        raise ValueError(f"deadline must be positive, got {deadline_s}")
+    if reference_s <= 0:
+        raise ValueError(f"reference_s must be positive, got {reference_s}")
+    return min(max(deadline_s / reference_s, min_budget), max_budget)

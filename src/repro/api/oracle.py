@@ -29,6 +29,7 @@ import numpy as np
 
 from ..solvers.brute_force import BRUTE_FORCE_MAX_N
 from ..utils import load_json_cache, store_json_cache
+from .batching import plan_buckets
 from .problem import Problem
 from .suite import ProblemSuite
 
@@ -48,9 +49,25 @@ def cache_path() -> str:
 
 
 # shared atomic best-effort JSON cache (same helper as the engine's
-# autotune cache)
+# autotune cache); stores are merge-on-store, so parallel workers
+# refreshing disjoint problems union their entries instead of clobbering
 _load = load_json_cache
-_store = store_json_cache
+
+
+def _keep_best(old: dict, new: dict) -> dict:
+    """Concurrent-writer conflict rule: best-known energies are upper
+    bounds on the ground state, so the LOWER energy wins the merge. Ties
+    go to the NEW entry — the exact-tier upgrade of a stale heuristic
+    entry whose energy already equals ground truth must persist its
+    'brute_force' method, or every future call re-brute-forces it."""
+    try:
+        return new if float(new["energy"]) <= float(old["energy"]) else old
+    except (KeyError, TypeError, ValueError):
+        return new
+
+
+def _store(path: str, cache: dict) -> None:
+    store_json_cache(path, cache, resolve=_keep_best)
 
 
 def _compute(problem: Problem) -> dict:
@@ -114,11 +131,14 @@ def best_known_energies(problems, use_cache: bool = True,
         out[i] = entry["energy"]
 
     if large:
-        sub = ProblemSuite([problems[i] for i in large])
+        # the shared pad-bucket planner: the WHOLE refresh is one device
+        # dispatch per pad bucket, never a per-problem loop
+        subs = [problems[i] for i in large]
+        plan = plan_buckets([p.n for p in subs])
         stamp = time.strftime("%Y-%m-%d %H:%M:%S")
-        for bucket in sub.buckets():
+        for bucket in plan.materialize([p.J_levels for p in subs]):
             e_best = _tabu_jax_batch(
-                bucket.J, [sub[k].n for k in bucket.indices], seed=seed)
+                bucket.J, [subs[k].n for k in bucket.indices], seed=seed)
             for k, sub_i in enumerate(bucket.indices):
                 i = large[sub_i]
                 p = problems[i]

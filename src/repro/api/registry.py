@@ -29,11 +29,12 @@ from typing import Optional, Protocol, runtime_checkable
 import numpy as np
 
 from ..solvers.brute_force import BRUTE_FORCE_MAX_N
+from .batching import CHIP_BLOCK, padded_size, plan_buckets
 from .budget import budget_factor, search_effort
 from .oracle import best_known_energies, reconcile_best_known
 from .problem import Problem
 from .report import SolveReport
-from .suite import CHIP_BLOCK, ProblemSuite, padded_size
+from .suite import ProblemSuite
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,17 +160,18 @@ def _bucketed_report(suite, solver_name, runs, block, run_bucket,
                      meta=None, buckets=None, warmup=False) -> SolveReport:
     """Shared bucket loop: run ``run_bucket(bucket, b_idx) -> (e, s)`` with
     ``e (P, R)`` level-space energies and ``s (P, R, n_pad)`` spins; trim
-    and reorder into suite order. Pass ``buckets`` if already built (the
-    padded batches are the expensive part — don't stack them twice).
+    and reorder into suite order via the shared planner
+    (``api.batching.BatchPlan.scatter``). Pass ``buckets`` if already built
+    (the padded batches are the expensive part — don't stack them twice).
 
     With ``warmup`` each bucket is dispatched twice: the first call pays
     XLA compilation/tracing, the second is timed. ``wall_s`` then measures
     steady-state solve time (what ``anneals_per_s`` should charge the
     solver for) and ``compile_s`` the one-time difference — seeds are
     per-bucket deterministic, so both calls return identical results."""
+    plan = plan_buckets(suite.sizes, block)
     buckets = buckets if buckets is not None else suite.buckets(block)
-    energies = [None] * len(suite)
-    sigmas = [None] * len(suite)
+    outputs = []
     wall = compile_s = 0.0
     for b_idx, bucket in enumerate(buckets):
         if warmup:
@@ -185,11 +187,8 @@ def _bucketed_report(suite, solver_name, runs, block, run_bucket,
         wall += dt
         if warmup:
             compile_s += max(0.0, t_first - dt)
-        for k, i in enumerate(bucket.indices):
-            n = suite[i].n
-            best = int(np.argmin(e[k]))
-            energies[i] = e[k]
-            sigmas[i] = s[k, best, :n].astype(np.int8)
+        outputs.append((e, s))
+    energies, sigmas = plan.scatter(outputs)
     return SolveReport(
         solver=solver_name, runs=runs, energies=energies, best_sigma=sigmas,
         problem_hashes=suite.hashes, sizes=suite.sizes,

@@ -98,14 +98,38 @@ class SolveReport:
 
     # -- composition / serialization ---------------------------------------
     def merge(self, other: "SolveReport") -> "SolveReport":
-        """Concatenate two reports from the same solver (e.g. shards of one
-        sweep solved on different hosts)."""
+        """Concatenate two reports from the same solver — shards of one
+        sweep solved on different hosts, or the serve tier's streamed
+        per-bucket partial reports.
+
+        Additive columns (``wall_s`` / ``compile_s`` / ``dispatches``) sum.
+        ``runs`` must agree: partial reports of one streamed solve share
+        the per-problem run count, and silently keeping one side's value
+        would make per-run metrics (``anneals_per_s``, SR) lie about the
+        other side's problems. Meta entries that are per-problem lists
+        (length == their report's problem count on BOTH sides — e.g. tabu's
+        ``iters_used``, PT's ``swap_acceptances``) concatenate in problem
+        order; other conflicting keys keep ``self``'s value, as before.
+        """
         if other.solver != self.solver:
             raise ValueError(f"cannot merge reports from {self.solver!r} "
                              f"and {other.solver!r}")
+        if other.runs != self.runs:
+            raise ValueError(f"cannot merge reports with runs={self.runs} "
+                             f"and runs={other.runs}; per-run metrics would "
+                             f"be inconsistent across problems")
         bk = None
         if self.best_known is not None and other.best_known is not None:
             bk = np.concatenate([self.best_known, other.best_known])
+        meta = dict(other.meta)
+        for k, v in self.meta.items():
+            w = meta.get(k)
+            if isinstance(v, list) and isinstance(w, list) and \
+                    len(v) == self.num_problems and \
+                    len(w) == other.num_problems:
+                meta[k] = v + w          # per-problem: self's problems first
+            else:
+                meta[k] = v
         return SolveReport(
             solver=self.solver, runs=self.runs,
             energies=list(self.energies) + list(other.energies),
@@ -116,7 +140,57 @@ class SolveReport:
             wall_s=self.wall_s + other.wall_s,
             compile_s=self.compile_s + other.compile_s,
             dispatches=self.dispatches + other.dispatches,
-            meta={**other.meta, **self.meta}, best_known=bk)
+            meta=meta, best_known=bk)
+
+    @classmethod
+    def merge_many(cls, reports) -> "SolveReport":
+        """Multi-way ``merge`` in one pass — same semantics as pairwise
+        left-folding, but each column is concatenated once, so assembling
+        a long stream of per-bucket partials (the serve tier's ``report()``)
+        is linear in the flush count instead of quadratic."""
+        reports = list(reports)
+        if not reports:
+            raise ValueError("merge_many needs at least one report")
+        first = reports[0]
+        for r in reports[1:]:
+            if r.solver != first.solver:
+                raise ValueError(f"cannot merge reports from "
+                                 f"{first.solver!r} and {r.solver!r}")
+            if r.runs != first.runs:
+                raise ValueError(f"cannot merge reports with runs="
+                                 f"{first.runs} and runs={r.runs}; per-run "
+                                 f"metrics would be inconsistent across "
+                                 f"problems")
+        bk = None
+        if all(r.best_known is not None for r in reports):
+            bk = np.concatenate([r.best_known for r in reports])
+        meta: dict = {}
+        for r in reports:                # first occurrence wins conflicts,
+            for k, v in r.meta.items():  # per-problem lists concatenate —
+                w = meta.get(k)          # exactly the pairwise fold's rules
+                if w is None:
+                    meta[k] = v
+                elif isinstance(v, list) and isinstance(w, list):
+                    meta[k] = w + v
+        # re-check the per-problem alignment the pairwise rule enforces:
+        # only lists that track problem count stay concatenated; anything
+        # else falls back to its first occurrence (= pairwise self-wins)
+        total = sum(r.num_problems for r in reports)
+        for k in list(meta):
+            if isinstance(meta[k], list) and len(meta[k]) != total:
+                meta[k] = next(r.meta[k] for r in reports if k in r.meta)
+        return cls(
+            solver=first.solver, runs=first.runs,
+            energies=[e for r in reports for e in r.energies],
+            best_sigma=[s for r in reports for s in r.best_sigma],
+            problem_hashes=tuple(h for r in reports
+                                 for h in r.problem_hashes),
+            sizes=tuple(n for r in reports for n in r.sizes),
+            scales=tuple(s for r in reports for s in r.scales),
+            wall_s=sum(r.wall_s for r in reports),
+            compile_s=sum(r.compile_s for r in reports),
+            dispatches=sum(r.dispatches for r in reports),
+            meta=meta, best_known=bk)
 
     def to_json(self) -> dict:
         """JSON-serializable dict — one schema for every solver."""

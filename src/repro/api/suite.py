@@ -14,32 +14,13 @@ they contribute nothing to any real spin's dynamics nor to the energy.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
+from .batching import (CHIP_BLOCK, BatchPlan, Bucket,  # noqa: F401
+                       padded_size, plan_buckets)
 from .problem import Problem
-
-#: one chip die — the default padding block.
-CHIP_BLOCK = 64
-
-
-def padded_size(n: int, block: int = CHIP_BLOCK) -> int:
-    """Smallest multiple of ``block`` holding ``n`` spins (>= block)."""
-    return max(block, -(-n // block) * block)
-
-
-@dataclasses.dataclass(frozen=True)
-class Bucket:
-    """One stacked device batch: all suite problems padding to ``n_pad``."""
-    n_pad: int
-    indices: tuple[int, ...]          # positions in the parent suite
-    J: np.ndarray                     # (P, n_pad, n_pad) float32 LEVEL space
-
-    @property
-    def num_problems(self) -> int:
-        return len(self.indices)
 
 
 class ProblemSuite:
@@ -122,22 +103,18 @@ class ProblemSuite:
         return ProblemSuite([p for p in self.problems if pred(p)])
 
     # -- device batching ---------------------------------------------------
+    def plan(self, block: int = CHIP_BLOCK) -> BatchPlan:
+        """The shared pad-bucket plan (``api.batching.plan_buckets``) for
+        this suite — membership only, no arrays stacked yet."""
+        return plan_buckets(self.sizes, block)
+
     def buckets(self, block: int = CHIP_BLOCK) -> list[Bucket]:
         """Group problems by padded size; one stacked level-space batch per
-        group. The number of buckets is the number of device dispatches a
-        batched solver needs for the whole suite."""
-        groups: dict[int, list[int]] = {}
-        for i, p in enumerate(self.problems):
-            groups.setdefault(padded_size(p.n, block), []).append(i)
-        out = []
-        for n_pad in sorted(groups):
-            idx = groups[n_pad]
-            J = np.zeros((len(idx), n_pad, n_pad), dtype=np.float32)
-            for k, i in enumerate(idx):
-                n = self.problems[i].n
-                J[k, :n, :n] = self.problems[i].J_levels
-            out.append(Bucket(n_pad=n_pad, indices=tuple(idx), J=J))
-        return out
+        group (``api.batching``: plan + ``pad_stack``). The number of
+        buckets is the number of device dispatches a batched solver needs
+        for the whole suite."""
+        return self.plan(block).materialize(
+            [p.J_levels for p in self.problems])
 
     def num_dispatches(self, block: int = CHIP_BLOCK) -> int:
-        return len({padded_size(p.n, block) for p in self.problems})
+        return self.plan(block).num_buckets

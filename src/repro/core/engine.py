@@ -297,6 +297,7 @@ class BlockLNS:
         """Minimize level-space H = -0.5 s'Js for each (N_i, N_i) in
         ``J_list``. Returns (per-problem (energies (R,), sigma (R, N_i),
         init_energies (R,)), dispatches)."""
+        from ..api.batching import pad_stack
         from .lfsr import lfsr_voltage_inits
         cb = self.chip_block
         rng = np.random.default_rng(seed)
@@ -318,18 +319,21 @@ class BlockLNS:
 
         dispatches = 0
         for sweep in range(outer_sweeps):
-            batch = np.zeros((n_subs, cb, cb), dtype=np.float32)
-            k = 0
+            # one (m+1)-spin sub-instance stack per (problem, block) — the
+            # boundary ancilla row/col carries each restart's exact field —
+            # padded onto the die by the shared planner's pad_stack
+            smalls = []
             for p, b in sub_of:
                 J, S, blk = Js[p], states[p], blocks[p][b]
                 m = len(blk)
                 Jbb = J[np.ix_(blk, blk)]
                 h = S @ J[:, blk] - S[:, blk] @ Jbb        # (R, m) exact field
-                rows = slice(k, k + restarts)
-                batch[rows, 0, 1:m + 1] = h
-                batch[rows, 1:m + 1, 0] = h
-                batch[rows, 1:m + 1, 1:m + 1] = Jbb        # broadcast once
-                k += restarts
+                sub = np.zeros((restarts, m + 1, m + 1), dtype=np.float32)
+                sub[:, 0, 1:] = h
+                sub[:, 1:, 0] = h
+                sub[:, 1:, 1:] = Jbb                       # broadcast once
+                smalls.append(sub)
+            batch = pad_stack(smalls, cb)
             v0 = lfsr_voltage_inits(cb, self.inner_runs,
                                     seed=seed + 7919 * (sweep + 1))
             res = self.engine.run(batch, np.broadcast_to(

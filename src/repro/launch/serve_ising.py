@@ -1,0 +1,128 @@
+"""Ising solve service driver — closed-loop load against ``IsingService``.
+
+    # 8 closed-loop clients streaming a mixed 16/32/64-spin pool for 20 s
+    PYTHONPATH=src python -m repro.launch.serve_ising --solver sa-jax \
+        --clients 8 --duration 20 --sizes 16,32,64 --pool 32
+
+    # tight per-request deadlines (mapped to effort budgets) + no cache
+    PYTHONPATH=src python -m repro.launch.serve_ising --deadline-ms 50 \
+        --no-cache
+
+Each client thread repeatedly submits a random problem from a pre-built
+pool and blocks on the result (closed loop — a client's next request only
+enters the queue after its last one resolved, so concurrency == clients).
+The main thread prints a live line per second: sustained problems/s, p50
+and p95 latency, cache hit rate, and the coalescing ledger (requests per
+flush, device dispatches). On exit it prints the streamed ``SolveReport``
+summary — the same schema the offline path produces.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import threading
+import time
+
+from ..api import Problem
+from ..serve import IsingService
+
+
+def build_pool(sizes, density: float, pool: int, seed: int) -> list[Problem]:
+    """``pool`` random-QUBO instances cycling through ``sizes``."""
+    return [Problem.random_qubo(sizes[i % len(sizes)], density, seed=seed + i)
+            for i in range(pool)]
+
+
+def run_load(svc: IsingService, pool, clients: int, duration_s: float,
+             deadline_s=None, seed: int = 0, live: bool = True) -> dict:
+    """Closed-loop load generator; returns the final service stats."""
+    stop = threading.Event()
+    errors = []
+
+    def client(cid: int):
+        rng = random.Random(seed + cid)
+        while not stop.is_set():
+            p = rng.choice(pool)
+            try:
+                svc.submit(p, deadline_s=deadline_s).result(timeout=300)
+            except Exception as e:        # noqa: BLE001 — surface at exit
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=client, args=(c,), daemon=True)
+               for c in range(clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    next_tick = t0 + 1.0
+    while time.monotonic() - t0 < duration_s and not errors:
+        time.sleep(max(0.0, next_tick - time.monotonic()))
+        next_tick += 1.0
+        if live:
+            s = svc.stats()
+            print(f"[{time.monotonic() - t0:5.1f}s] "
+                  f"{s['problems_per_s']:7.1f} problems/s  "
+                  f"p50 {s['p50_latency_s'] * 1e3:7.1f} ms  "
+                  f"p95 {s['p95_latency_s'] * 1e3:7.1f} ms  "
+                  f"hit {s['cache_hit_rate']:5.1%}  "
+                  f"{s['mean_batch']:4.1f} req/flush  "
+                  f"{s['dispatches']} dispatches", flush=True)
+    stop.set()
+    for t in threads:
+        t.join(timeout=300)
+    if errors:
+        raise errors[0]
+    return svc.stats()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--solver", default="sa-jax",
+                    help="registered solver backing the service")
+    ap.add_argument("--sizes", default="16,32,64",
+                    help="comma-separated spin counts in the problem mix")
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--pool", type=int, default=32,
+                    help="distinct problems the load generator cycles over")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="closed-loop client threads")
+    ap.add_argument("--duration", type=float, default=20.0,
+                    help="seconds of sustained load")
+    ap.add_argument("--runs", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="admission policy: flush a pad bucket at this size")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="admission policy: flush a non-full bucket after "
+                         "its oldest request waited this long")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline, mapped to an effort budget "
+                         "via api.budget.deadline_to_budget")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the content-hash result cache")
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    pool = build_pool(sizes, args.density, args.pool, seed=args.seed)
+    deadline_s = (args.deadline_ms / 1e3
+                  if args.deadline_ms is not None else None)
+
+    with IsingService(solver=args.solver, runs=args.runs, seed=args.seed,
+                      max_batch=args.max_batch,
+                      max_wait_s=args.max_wait_ms / 1e3,
+                      cache=not args.no_cache) as svc:
+        stats = run_load(svc, pool, args.clients, args.duration,
+                         deadline_s=deadline_s, seed=args.seed + 1)
+        rep = svc.report()
+    print(f"\n-- final: {stats['completed']} solved "
+          f"({stats['problems_per_s']:.1f}/s sustained), "
+          f"p50 {stats['p50_latency_s'] * 1e3:.1f} ms / "
+          f"p95 {stats['p95_latency_s'] * 1e3:.1f} ms, "
+          f"cache hit {stats['cache_hit_rate']:.1%}, "
+          f"{stats['flushes']} flushes -> {stats['dispatches']} dispatches")
+    if rep is not None:
+        print(rep.summary())
+
+
+if __name__ == "__main__":
+    main()

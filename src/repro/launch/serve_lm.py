@@ -1,0 +1,83 @@
+"""Batched LM serving driver: prefill once, then token-by-token decode.
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-0.6b \
+        --batch 4 --prompt-len 64 --gen 32
+
+(Formerly ``repro.launch.serve`` — that name now belongs to the Ising
+solve service; see ``repro.launch.serve_ising`` and ``repro.serve``.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data import SyntheticLM
+from ..models import build
+from .mesh import activate_mesh, make_host_mesh
+
+
+def serve(arch: str, batch: int, prompt_len: int, gen: int,
+          reduced: bool = True, greedy: bool = True, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    if model.decode_step is None:
+        raise SystemExit(f"{arch} is encoder-only; no decode path")
+    mesh = make_host_mesh()
+    with activate_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(seed))
+        ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                         global_batch=batch)
+        prompts, _ = ds.batch_at(0)
+        prompts = jnp.asarray(prompts)
+        max_len = prompt_len + gen
+
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        t0 = time.time()
+        if model.prefill is not None and cfg.family in ("dense", "moe", "vlm"):
+            logits, cache = jax.jit(
+                lambda p, b: model.prefill(p, b, max_len=max_len))(
+                    params, {"tokens": prompts})
+        else:
+            # recurrent families: warm the state token-by-token
+            cache = model.init_cache(batch, max_len)
+            for t in range(prompt_len):
+                logits, cache = decode(params, cache, prompts[:, t])
+        t_prefill = time.time() - t0
+
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for _ in range(gen - 1):
+            logits, cache = decode(params, cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        t_decode = time.time() - t0
+        gen_tokens = np.stack([np.asarray(t) for t in out], axis=1)
+        return {"generated": gen_tokens, "prefill_s": t_prefill,
+                "decode_s": t_decode,
+                "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+    out = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                reduced=not args.full_size)
+    print(f"prefill {out['prefill_s']:.2f}s, decode {out['decode_s']:.2f}s "
+          f"({out['tok_per_s']:.1f} tok/s), sample: {out['generated'][0][:16]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro.serve — the continuous-batching Ising solve service.
+
+    from repro.serve import IsingService
+
+    with IsingService(solver="engine", runs=64, max_batch=32,
+                      max_wait_s=0.02) as svc:
+        tickets = [svc.submit(p) for p in problems]     # non-blocking
+        results = [t.result() for t in tickets]         # (R,) energies each
+        print(svc.stats())                              # p50/p95, problems/s
+
+The service keeps the array continuously busy the way the chip does:
+requests queue while a dispatch is in flight, the dynamic batcher coalesces
+everything waiting into pad buckets (the same ``api.batching`` planner the
+offline suite path uses), and each bucket costs exactly one device
+dispatch. See SERVE.md for the architecture and admission policies.
+"""
+from .service import IsingService, ServeResult, ServeTicket
+
+__all__ = ["IsingService", "ServeResult", "ServeTicket"]

@@ -1,0 +1,455 @@
+"""``IsingService`` — request queue + dynamic batcher over one solve path.
+
+The offline path (``solve_suite``) blocks per call and owns the whole
+suite up front. A service sees the opposite regime — many small
+heterogeneous instances arriving as a stream — and sustains throughput the
+way the chip sustains its energy-to-solution: never let the array idle
+between problems. Three mechanisms, all riding the shared
+``api.batching`` planner:
+
+* **Dynamic batching.** Submitted requests queue per coalescing group
+  (padded size x budget tier). A group flushes when it holds ``max_batch``
+  requests, or when its oldest request has waited ``max_wait_s`` (tight
+  per-request deadlines shrink that wait — a request never queues longer
+  than half its deadline). Each flush is ONE suite solve whose problems
+  all share a pad bucket, so a batched solver issues exactly one device
+  dispatch per flush — requests that arrive while a dispatch is in flight
+  coalesce into the next one (continuous batching, not stop-and-wait).
+
+* **Deadline -> budget.** A per-request ``deadline_s`` maps through
+  ``api.budget.deadline_to_budget`` onto the same uniform effort
+  multiplier every solver understands, then through ``search_effort``
+  inside the solver. Requests batch with others in the same power-of-two
+  budget tier, and the flushed dispatch runs at the tier's TIGHTEST
+  budget, so no member's deadline is blown by a looser neighbor.
+
+* **Content-hash result cache.** Results are cached under
+  ``Problem.content_hash`` (plus solver/runs/seed identity); a repeated
+  problem is answered without any dispatch, as long as the cached entry
+  was computed at >= the requested effort. The cache persists through the
+  same merge-on-store JSON machinery as the oracle cache, so parallel
+  service workers union their entries instead of clobbering.
+
+Every flushed dispatch produces a per-bucket partial ``SolveReport``;
+``report()`` returns the streamed ``merge`` of all of them, so the service
+exposes the exact same metrics surface (SR/TTS/ETS, dispatch counts,
+wall/compile split) as an offline solve.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import math
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..api.batching import CHIP_BLOCK, padded_size
+from ..api.budget import deadline_to_budget
+from ..api.problem import Problem
+from ..api.registry import get_solver
+from ..api.report import SolveReport
+from ..api.suite import ProblemSuite
+from ..utils import load_json_cache, store_json_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """What one request gets back — the per-problem slice of the dispatch."""
+    problem_hash: str
+    energies: np.ndarray          # (R,) level-space per-run energies
+    sigma: np.ndarray             # (n,) int8 best configuration
+    latency_s: float              # submit -> resolve
+    batch_size: int               # problems coalesced into the dispatch
+    cached: bool                  # served from the result cache (no dispatch)
+    budget: Optional[float]       # effective effort multiplier applied
+
+    @property
+    def best_energy(self) -> float:
+        return float(np.min(self.energies))
+
+
+class ServeTicket:
+    """Handle for one in-flight request; ``result()`` blocks until solved."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Optional[ServeResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ServeResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not resolved within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    # -- service side ------------------------------------------------------
+    def _resolve(self, value: ServeResult) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _Request:
+    problem: Problem
+    budget: Optional[float]       # effort multiplier (deadline-mapped)
+    deadline_s: Optional[float]
+    submitted: float              # monotonic
+    ticket: ServeTicket
+
+
+def _budget_tier(budget: Optional[float]) -> Optional[int]:
+    """Power-of-two coalescing tier: requests whose effort multipliers are
+    within 2x batch together (the flush runs at the tier minimum)."""
+    if budget is None:
+        return None
+    return int(round(math.log2(budget)))
+
+
+class IsingService:
+    """Continuous-batching solve service over one registered solver.
+
+    Parameters mirror the offline path (``solver``/``runs``/``seed``/
+    ``block`` mean exactly what they mean in ``solve_suite``) plus the
+    admission policy: ``max_batch`` problems per coalesced bucket,
+    ``max_wait_s`` queueing time before a non-full bucket flushes anyway.
+    ``cache_path=None`` keeps the result cache in-memory only;
+    ``cache=False`` disables it entirely (every request dispatches).
+    """
+
+    def __init__(self, solver: str = "engine", runs: int = 64,
+                 seed: int = 0, block: int = CHIP_BLOCK,
+                 max_batch: int = 64, max_wait_s: float = 0.02,
+                 cache: bool = True, cache_path: Optional[str] = None,
+                 deadline_reference_s: float = 1.0, **solver_opts):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.solver_name = solver
+        self.runs = int(runs)
+        self.seed = int(seed)
+        self.block = int(block)
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.deadline_reference_s = float(deadline_reference_s)
+        self._solver = get_solver(solver, **solver_opts)
+        # solver configuration digest: differently configured services
+        # sharing a persistent cache_path must never serve each other's
+        # results as equivalent (n_sweeps=20 vs 2000 is not the same answer)
+        cfg = repr((sorted(solver_opts.items()), self.block))
+        self._config_digest = hashlib.sha1(cfg.encode()).hexdigest()[:12]
+
+        self._cache_enabled = bool(cache)
+        self._cache_path = cache_path
+        self._cache: dict[str, dict] = (
+            load_json_cache(cache_path) if cache and cache_path else {})
+
+        self._lock = threading.Condition()
+        self._pending: dict[tuple, list[_Request]] = {}
+        # per-flush partial reports; merged lazily in report() so the hot
+        # path appends O(1) instead of re-concatenating the whole history
+        # under the lock on every flush
+        self._partials: list[SolveReport] = []
+        self._running = False
+        self._draining = False
+        self._thread: Optional[threading.Thread] = None
+        self._started_at: Optional[float] = None
+        # counters (under _lock); latency/batch windows are bounded so a
+        # long-running service's stats() stays O(window), not O(lifetime)
+        self._submitted = 0
+        self._completed = 0
+        self._cache_hits = 0
+        self._flushes = 0            # coalesced pad buckets dispatched
+        self._dispatches = 0         # device dispatches the solver issued
+        self._errors = 0
+        self._latencies: collections.deque = collections.deque(maxlen=100_000)
+        self._batch_sizes: collections.deque = collections.deque(maxlen=10_000)
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "IsingService":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+            self._draining = False
+            self._started_at = time.monotonic()
+            # a restart is a fresh serving run: counters, latency windows
+            # and the streamed report all reset (rates would otherwise mix
+            # the previous run's completions with this run's clock)
+            self._submitted = self._completed = self._cache_hits = 0
+            self._flushes = self._dispatches = self._errors = 0
+            self._latencies.clear()
+            self._batch_sizes.clear()
+            self._partials = []
+        self._thread = threading.Thread(target=self._worker,
+                                        name="ising-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker. ``drain`` (default) flushes and resolves every
+        queued request first; otherwise queued requests fail."""
+        with self._lock:
+            if not self._running:
+                return
+            self._draining = drain
+            self._running = False
+            self._lock.notify_all()
+        self._thread.join()
+        self._thread = None
+        if not drain:
+            with self._lock:
+                for reqs in self._pending.values():
+                    for r in reqs:
+                        r.ticket._fail(RuntimeError("service stopped"))
+                self._pending.clear()
+        self._persist_cache()
+
+    def __enter__(self) -> "IsingService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client surface ----------------------------------------------------
+    def submit(self, problem: Problem, deadline_s: Optional[float] = None,
+               budget: Optional[float] = None) -> ServeTicket:
+        """Queue one problem; returns immediately with a ticket.
+
+        ``deadline_s`` maps to an effort budget via ``deadline_to_budget``
+        (an explicit ``budget`` overrides the mapping) and also bounds the
+        request's queueing time at ``deadline_s / 2``.
+        """
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service is not running; use "
+                                   "`with IsingService(...) as svc:` or "
+                                   "call start()")
+        if not isinstance(problem, Problem):
+            problem = Problem.from_couplings(problem)
+        caps = self._solver.caps
+        if caps.max_n is not None and problem.n > caps.max_n:
+            raise ValueError(
+                f"solver {self.solver_name!r} takes N <= {caps.max_n}; "
+                f"got N={problem.n} (serve larger instances through a "
+                f"'chip-lns' service)")
+        if budget is None:
+            budget = deadline_to_budget(
+                deadline_s, reference_s=self.deadline_reference_s)
+        elif budget <= 0:
+            raise ValueError(f"budget must be positive, got {budget}")
+        ticket = ServeTicket()
+        req = _Request(problem=problem, budget=budget, deadline_s=deadline_s,
+                       submitted=time.monotonic(), ticket=ticket)
+
+        hit = self._cache_lookup(req)
+        if hit is not None:
+            ticket._resolve(hit)
+            with self._lock:
+                self._submitted += 1
+                self._completed += 1
+                self._cache_hits += 1
+                self._latencies.append(hit.latency_s)
+            return ticket
+
+        key = (padded_size(problem.n, self.block), _budget_tier(budget))
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service is not running; use "
+                                   "`with IsingService(...) as svc:` or "
+                                   "call start()")
+            self._submitted += 1
+            self._pending.setdefault(key, []).append(req)
+            self._lock.notify_all()
+        return ticket
+
+    def submit_many(self, problems, **kw) -> list[ServeTicket]:
+        return [self.submit(p, **kw) for p in problems]
+
+    def report(self) -> Optional[SolveReport]:
+        """Streamed merge of every flushed bucket's partial SolveReport —
+        the same schema the offline path returns for a whole suite. The
+        merge happens here, on demand, not per flush; its size (and the
+        service's report memory) grows with the number of problems
+        dispatched, so long-running deployments that only need counters
+        should read ``stats()`` instead."""
+        with self._lock:
+            partials = list(self._partials)
+        if not partials:
+            return None
+        return SolveReport.merge_many(partials)
+
+    def stats(self) -> dict:
+        """Live service counters: latency percentiles, throughput, cache
+        hit rate, and the coalescing/dispatch ledger."""
+        with self._lock:
+            lat = np.asarray(self._latencies, dtype=np.float64)
+            elapsed = (time.monotonic() - self._started_at
+                       if self._started_at else 0.0)
+            return {
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "pending": sum(len(v) for v in self._pending.values()),
+                "errors": self._errors,
+                "cache_hits": self._cache_hits,
+                "cache_hit_rate": (self._cache_hits / self._submitted
+                                   if self._submitted else 0.0),
+                "flushes": self._flushes,
+                "dispatches": self._dispatches,
+                "mean_batch": (float(np.mean(self._batch_sizes))
+                               if self._batch_sizes else 0.0),
+                "p50_latency_s": (float(np.percentile(lat, 50))
+                                  if lat.size else 0.0),
+                "p95_latency_s": (float(np.percentile(lat, 95))
+                                  if lat.size else 0.0),
+                "elapsed_s": elapsed,
+                "problems_per_s": (self._completed / elapsed
+                                   if elapsed > 0 else 0.0),
+            }
+
+    # -- batcher -----------------------------------------------------------
+    def _wait_allowance(self, req: _Request) -> float:
+        """How long this request may queue: the service's max wait, capped
+        at half the request's own deadline (the other half is for the
+        dispatch itself)."""
+        if req.deadline_s is None:
+            return self.max_wait_s
+        return min(self.max_wait_s, 0.5 * req.deadline_s)
+
+    def _due_keys(self, now: float):
+        """(keys ready to flush, seconds until the next one becomes due)."""
+        due, next_due = [], None
+        for key, reqs in self._pending.items():
+            if not reqs:
+                continue
+            if len(reqs) >= self.max_batch or self._draining:
+                due.append(key)
+                continue
+            fire_at = min(r.submitted + self._wait_allowance(r)
+                          for r in reqs)
+            if fire_at <= now:
+                due.append(key)
+            elif next_due is None or fire_at < next_due:
+                next_due = fire_at
+        return due, next_due
+
+    def _worker(self) -> None:
+        while True:
+            with self._lock:
+                if not self._running and not self._draining:
+                    return                 # stop(drain=False): leave the
+                now = time.monotonic()     # queue for stop() to fail
+                due, next_due = self._due_keys(now)
+                if not due:
+                    if not self._running:
+                        return
+                    timeout = (None if next_due is None
+                               else max(0.0, next_due - now))
+                    self._lock.wait(timeout)
+                    continue
+                batches = []
+                for key in due:
+                    reqs = self._pending.pop(key)
+                    # honor max_batch even on a burst: split oversize groups
+                    for i in range(0, len(reqs), self.max_batch):
+                        batches.append(reqs[i:i + self.max_batch])
+            for reqs in batches:           # dispatch OUTSIDE the lock —
+                self._solve_batch(reqs)    # new submits keep coalescing
+
+    def _solve_batch(self, reqs: list[_Request]) -> None:
+        budgets = [r.budget for r in reqs if r.budget is not None]
+        budget = min(budgets) if budgets else None
+        suite = ProblemSuite([r.problem for r in reqs])
+        try:
+            rep = self._solver.solve(suite, runs=self.runs, seed=self.seed,
+                                     budget=budget, block=self.block)
+        except Exception as e:
+            with self._lock:
+                self._errors += len(reqs)
+            for r in reqs:
+                r.ticket._fail(e)
+            return
+        now = time.monotonic()
+        results = []
+        for i, r in enumerate(reqs):
+            res = ServeResult(
+                problem_hash=r.problem.content_hash,
+                energies=np.asarray(rep.energies[i], dtype=np.float64),
+                sigma=np.asarray(rep.best_sigma[i], dtype=np.int8),
+                latency_s=now - r.submitted, batch_size=len(reqs),
+                cached=False, budget=budget)
+            results.append(res)
+            self._cache_store(r, res)
+        with self._lock:
+            self._partials.append(rep)
+            self._flushes += 1
+            self._dispatches += rep.dispatches
+            self._completed += len(reqs)
+            self._batch_sizes.append(len(reqs))
+            self._latencies.extend(res.latency_s for res in results)
+        for r, res in zip(reqs, results):
+            r.ticket._resolve(res)
+
+    # -- result cache ------------------------------------------------------
+    def _cache_key(self, problem: Problem) -> str:
+        return (f"{self.solver_name}:{self.runs}:{self.seed}:"
+                f"{self._config_digest}:{problem.content_hash}")
+
+    def _cache_lookup(self, req: _Request) -> Optional[ServeResult]:
+        if not self._cache_enabled:
+            return None
+        with self._lock:
+            entry = self._cache.get(self._cache_key(req.problem))
+        if entry is None:
+            return None
+        # an entry only serves requests asking for <= its effort
+        have = entry.get("budget") or 1.0
+        want = req.budget if req.budget is not None else 1.0
+        if have < want - 1e-9:
+            return None
+        return ServeResult(
+            problem_hash=req.problem.content_hash,
+            energies=np.asarray(entry["energies"], dtype=np.float64),
+            sigma=np.asarray(entry["sigma"], dtype=np.int8),
+            latency_s=time.monotonic() - req.submitted,
+            batch_size=0, cached=True, budget=entry.get("budget"))
+
+    def _cache_store(self, req: _Request, res: ServeResult) -> None:
+        if not self._cache_enabled:
+            return
+        key = self._cache_key(req.problem)
+        new = {"budget": res.budget,
+               "energies": [float(e) for e in res.energies],
+               "sigma": [int(s) for s in res.sigma],
+               "n": req.problem.n}
+        with self._lock:
+            old = self._cache.get(key)
+            self._cache[key] = _higher_effort(old, new) if old else new
+
+    def _persist_cache(self) -> None:
+        if self._cache_enabled and self._cache_path and self._cache:
+            store_json_cache(self._cache_path, self._cache,
+                             resolve=_higher_effort)
+
+
+def _higher_effort(old: dict, new: dict) -> dict:
+    """Concurrent-writer conflict rule for the result cache: keep the entry
+    computed at the higher effort budget (it serves every request the
+    lower-effort one could, and more)."""
+    try:
+        return new if (new.get("budget") or 1.0) >= (old.get("budget") or 1.0) \
+            else old
+    except AttributeError:
+        return new

@@ -1,18 +1,52 @@
 """Shared small utilities.
 
-``load_json_cache`` / ``store_json_cache`` back both persistent caches in
-the repo — the AnnealEngine autotune cache (``core/engine.py``) and the
-best-known oracle cache (``api/oracle.py``). Loads tolerate missing files
-and QUARANTINE corrupt/truncated ones (renamed to ``<path>.corrupt`` so the
+``load_json_cache`` / ``store_json_cache`` back every persistent cache in
+the repo — the AnnealEngine autotune cache (``core/engine.py``), the
+best-known oracle cache (``api/oracle.py``), and the solve service's
+result cache (``serve/service.py``). Loads tolerate missing files and
+QUARANTINE corrupt/truncated ones (renamed to ``<path>.corrupt`` so the
 bad payload is kept for inspection but never re-read, and the next store
-starts from a clean slate); stores are atomic (tmp + rename) and
-best-effort — a cache is an optimization, so persistence failures never
-fail a solve.
+starts from a clean slate).
+
+Stores are atomic AND merging: the on-disk state is re-read at store time
+and union-merged with the writer's view before one tmp + ``os.replace``
+rename, with the read-merge-replace serialized across processes by an
+advisory ``flock`` on a ``<path>.lock`` sidecar (where ``fcntl`` exists —
+everywhere this repo runs). A plain write-what-I-loaded store is
+last-writer-wins — two parallel service workers that each loaded the same
+snapshot would silently drop each other's new entries; merge-on-store
+keeps the union (per-key conflicts go to ``resolve(old, new)``,
+defaulting to the writer's value). The tmp file is pid-unique so
+concurrent writers never truncate each other's half-written tmp. Stores
+stay best-effort — a cache is an optimization, so persistence failures
+never fail a solve.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
+from typing import Callable, Optional
+
+try:
+    import fcntl
+except ImportError:                      # non-POSIX: fall back to lockless
+    fcntl = None                         # (atomic rename still holds)
+
+
+@contextlib.contextmanager
+def _store_lock(path: str):
+    """Advisory cross-process lock serializing read-merge-replace cycles
+    on ``path``. Best-effort: yields unlocked when flock is unavailable."""
+    if fcntl is None:
+        yield
+        return
+    fd = os.open(path + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        os.close(fd)                     # closing releases the flock
 
 
 def load_json_cache(path: str) -> dict:
@@ -32,14 +66,28 @@ def load_json_cache(path: str) -> dict:
         return {}
 
 
-def store_json_cache(path: str, cache: dict) -> None:
+def store_json_cache(path: str, cache: dict,
+                     resolve: Optional[Callable] = None) -> None:
+    """Merge ``cache`` into the file at ``path`` atomically.
+
+    Keys present only on disk survive (another writer's entries are never
+    clobbered); keys present in both go to ``resolve(disk_value, value)``
+    — default: the caller's value wins (fresh computation beats stale).
+    """
     try:
         parent = os.path.dirname(path)
         if parent:                       # bare filenames have no dir to make
             os.makedirs(parent, exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(cache, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        with _store_lock(path):
+            disk = load_json_cache(path)
+            merged = dict(disk)
+            for key, val in cache.items():
+                if resolve is not None and key in disk:
+                    val = resolve(disk[key], val)
+                merged[key] = val
+            tmp = f"{path}.{os.getpid()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
     except OSError:
         pass
