@@ -15,8 +15,8 @@ import sys
 import traceback
 
 from . import (fig4_success, fig4_trajectories, fig5_sr_density, fig5_tts,
-               kernel_throughput, roofline_bench, serve_throughput,
-               solver_matrix, table2_ets, workloads)
+               kernel_throughput, roofline_bench, serve_chaos,
+               serve_throughput, solver_matrix, table2_ets, workloads)
 
 ALL = {
     "fig4_trajectories": fig4_trajectories.run,
@@ -28,6 +28,7 @@ ALL = {
     "roofline_bench": roofline_bench.run,
     "solver_matrix": solver_matrix.run,
     "serve_throughput": serve_throughput.run,
+    "serve_chaos": serve_chaos.run,
     "workloads": workloads.run,
 }
 

@@ -1,0 +1,209 @@
+"""Chaos-hardening gate: the serve tier under a seeded fault schedule.
+
+Three phases over one problem stream:
+
+  * **baseline** — the supervised service with NO faults, burst-submitted
+    so flush composition is deterministic. Its results are the reference.
+  * **chaos** — the identical service + a seeded ``FaultPlan`` injecting
+    dispatch errors, worker crashes, straggler delays, NaN energies, and
+    corrupt cache writes at ~10% of calls, with the full degradation
+    ladder armed (retry -> bisection -> breaker -> fallback chain,
+    watchdog + hedging, float64 validation, cache quarantine).
+  * **overload** — a burst past the admission thresholds: budgets must
+    degrade down the ladder first, then shed with typed ``Overloaded``.
+
+Writes ``BENCH_chaos.json`` at the repo root (CI archives it). Three hard
+gates make this a CI check, not a report:
+
+  1. **Zero lost tickets** — every submitted request resolves with an
+     answer; nothing hangs, nothing fails through to the caller while a
+     fallback tier exists.
+  2. **Every resolved energy revalidates** — exact float64 recompute of
+     ``-0.5 sigma' J sigma`` from the returned spins matches the returned
+     best energy for 100% of results (chaos may degrade effort, never
+     correctness).
+  3. **Fault-free rows are bit-identical to baseline** — any result the
+     supervision layer did NOT have to rescue or degrade must match the
+     fault-free run exactly: resilience is free when nothing goes wrong.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+from repro.launch.serve_ising import build_pool
+from repro.serve import (FaultPlan, IsingService, Overloaded,
+                         ResiliencePolicy, validate_row)
+
+from .common import csv_line, record, write_root_bench
+
+SOLVER = "sa-jax"
+FAULT_RATE = 0.10
+# chosen so the quick stream's first ~18 dispatches draw a MIX of kinds
+# (worker crashes, a flush error, a NaN energy) — a 10% schedule that
+# happens to inject nothing would gate the happy path twice
+PLAN_SEED = 2025
+
+
+def _policy(quick: bool) -> ResiliencePolicy:
+    # the watchdog must sit between an honest flush (~0.1s on this
+    # container, but noisy on one core) and the injected straggler delay
+    # (1.5s) — too tight and spurious hedges double the load and eat the
+    # fault schedule's draws out from under the retry/bisection paths
+    return ResiliencePolicy(
+        max_retries=2, backoff_base_s=0.002,
+        fallback=("sa-numpy",),
+        breaker_threshold=3, breaker_cooldown_s=1.0,
+        flush_timeout_s=0.6, min_timeout_s=0.5,
+        hedge=True, hedge_grace=40.0,
+    )
+
+
+def _run_stream(stream, runs, seed, policy, plan=None):
+    with IsingService(solver=SOLVER, runs=runs, seed=seed, cache=False,
+                      max_batch=4, max_wait_s=5.0,
+                      resilience=policy, fault_plan=plan) as svc:
+        t0 = time.time()
+        tickets = svc.submit_many(stream)
+        outs = []
+        for t in tickets:
+            try:
+                outs.append(t.result(timeout=600))
+            except Exception as e:       # noqa: BLE001 — gate counts these
+                outs.append(e)
+        wall = time.time() - t0
+        stats = svc.stats()
+    return outs, stats, wall
+
+
+def run(full: bool = False):
+    t_start = time.time()
+    sizes = (16, 32, 64)
+    pool_size, length, runs = (12, 96, 32) if full else (6, 40, 8)
+    seed = 606
+    pool = build_pool(sizes, 0.5, pool_size, seed=seed)
+    rng = random.Random(seed + 1)
+    stream = [rng.choice(pool) for _ in range(length)]
+    policy = _policy(not full)
+
+    # warm the XLA cache for both phases with the EXACT flush shapes the
+    # service will dispatch (an untimed pass of the same stream) — the
+    # watchdog must never see a compile masquerading as a straggler, and
+    # the baseline/chaos walls must compare steady states, not compiles
+    _run_stream(stream, runs, seed, policy)
+
+    # -- phase 1: fault-free baseline --------------------------------------
+    base, base_stats, base_wall = _run_stream(stream, runs, seed, policy)
+    if any(isinstance(r, Exception) for r in base):
+        raise RuntimeError("fault-free baseline failed a request — broken "
+                           "before chaos even started")
+
+    # -- phase 2: same stream under the seeded fault schedule --------------
+    plan = FaultPlan.from_rates(seed=PLAN_SEED, rate=FAULT_RATE,
+                                horizon=10_000, straggler_delay_s=1.5)
+    outs, stats, chaos_wall = _run_stream(stream, runs, seed, policy,
+                                          plan=plan)
+
+    # gate 1: zero lost/unresolved tickets — a fallback tier exists, so
+    # every request must come back with an ANSWER, not an error
+    failed = [i for i, r in enumerate(outs) if isinstance(r, Exception)]
+    if failed:
+        raise RuntimeError(
+            f"chaos run lost {len(failed)} ticket(s) (indices {failed[:5]}"
+            f"...): requests failed through a live fallback chain")
+
+    # gate 2: 100% of resolved energies pass exact float64 revalidation
+    bad = [i for i, (p, r) in enumerate(zip(stream, outs))
+           if not validate_row(p, r.energies, r.sigma)]
+    if bad:
+        raise RuntimeError(
+            f"chaos run resolved {len(bad)} corrupted result(s) (indices "
+            f"{bad[:5]}...): the validation guardrail leaked")
+
+    # gate 3: results the supervision layer did not touch are bit-identical
+    # to the fault-free baseline (rescued flushes re-compose the bucket and
+    # legitimately shift per-position RNG streams; degraded ones ran on a
+    # different solver — both are excluded BY THE RESULT'S OWN FLAGS)
+    untouched = 0
+    for i, (b, c) in enumerate(zip(base, outs)):
+        if c.degraded or c.rescued:
+            continue
+        untouched += 1
+        if not (np.array_equal(b.energies, c.energies)
+                and np.array_equal(b.sigma, c.sigma)):
+            raise RuntimeError(
+                f"stream[{i}] was untouched by fault recovery but diverged "
+                f"from the fault-free baseline — supervision is not free")
+    injected = stats["faults"]["injected"]
+    if sum(injected.values()) == 0:
+        raise RuntimeError("fault schedule injected nothing — the chaos "
+                           "gate tested the happy path twice")
+
+    degraded = sum(1 for r in outs if r.degraded)
+    rescued = sum(1 for r in outs if r.rescued and not r.degraded)
+
+    # -- phase 3: overload admission (degrade ladder, then typed shed) ------
+    over_policy = ResiliencePolicy(degrade_pending=4, shed_pending=12)
+    shed = 0
+    admitted = []
+    with IsingService(solver="sa-numpy", runs=runs, seed=seed, cache=False,
+                      max_batch=64, max_wait_s=0.2,
+                      resilience=over_policy) as svc:
+        for p in stream:
+            try:
+                admitted.append(svc.submit(p))
+            except Overloaded:
+                shed += 1
+        for t in admitted:
+            t.result(timeout=600)
+        over_stats = svc.stats()
+    if over_stats["completed"] != len(admitted):
+        raise RuntimeError("overload phase dropped admitted requests — "
+                           "shedding must only reject at the front door")
+
+    payload = {
+        "solver": SOLVER, "fallback": list(policy.fallback),
+        "stream_len": length, "runs": runs,
+        "fault_rate": FAULT_RATE, "plan_seed": PLAN_SEED,
+        "scheduled_fault_kinds": plan.counts(),
+        "injected": injected,
+        "baseline_wall_s": base_wall, "chaos_wall_s": chaos_wall,
+        "chaos_over_baseline": chaos_wall / max(base_wall, 1e-9),
+        "resolved": len(outs), "lost": 0,
+        "validated_fraction": 1.0,
+        "untouched_bit_identical": untouched,
+        "degraded_results": degraded, "rescued_results": rescued,
+        "retries": stats["resilience"]["retries"],
+        "bisections": stats["resilience"]["bisections"],
+        "hedges": stats["resilience"]["hedges"],
+        "flush_timeouts": stats["resilience"]["flush_timeouts"],
+        "validation_failures": stats["resilience"]["validation_failures"],
+        "breaker_trips": stats["resilience"]["breaker_trips"],
+        "fallback_solves": stats["resilience"]["fallback_solves"],
+        "overload_shed": shed,
+        "overload_degraded_admissions": over_stats["degraded_admissions"],
+        "overload_completed": over_stats["completed"],
+    }
+    record("serve_chaos", payload)
+    write_root_bench("BENCH_chaos.json", payload)
+
+    us = (time.time() - t_start) * 1e6 / max(length, 1)
+    print(csv_line(
+        "serve_chaos", us,
+        f"injected={sum(injected.values())};lost=0;validated=1.00;"
+        f"degraded={degraded};rescued={rescued};"
+        f"slowdown=x{chaos_wall / max(base_wall, 1e-9):.2f};"
+        f"shed={shed}"))
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (--full restores the long stream)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full and not args.quick)

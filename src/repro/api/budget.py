@@ -55,6 +55,25 @@ def search_effort(base_iters: float, runs: int,
         restarts=max(1, int(runs)), rungs=max(1, int(rungs)))
 
 
+def degrade_budget(budget: Optional[float], level: int,
+                   min_budget: float = 0.125) -> float:
+    """Overload degradation ladder: halve the effort multiplier once per
+    pressure ``level``, floored at ``min_budget``.
+
+    The serve tier's graceful-degradation contract: when the request queue
+    deepens past the admission threshold, budgets degrade through this
+    ladder BEFORE any request is shed — every rung still flows through the
+    uniform :func:`search_effort` mapping, so a degraded request gets a
+    cheaper (not slower, not failed) answer. ``level <= 0`` is a no-op;
+    the floor matches :func:`deadline_to_budget`'s clamp so degradation
+    can never drive a shared batch to degenerate effort.
+    """
+    b = budget_factor(budget)
+    if level <= 0:
+        return b
+    return max(min_budget, b * 0.5 ** int(level))
+
+
 def deadline_to_budget(deadline_s: Optional[float],
                        reference_s: float = 1.0,
                        min_budget: float = 0.125,

@@ -85,6 +85,36 @@ def get_solver(name: str, **opts) -> Solver:
     return cls(**opts)
 
 
+class SolverWrapper:
+    """Delegating base for solver interposers.
+
+    A wrapper satisfies the :class:`Solver` protocol by forwarding
+    ``name``/``caps``/``solve`` to the wrapped instance, so anything that
+    consumes a registered solver (``solve_suite``, the serve tier's flush
+    executor, benchmarks) accepts a wrapped one transparently. Subclass and
+    override ``solve`` to interpose — the serve tier's deterministic fault
+    injector (``repro.serve.faults.FaultySolver``) and test shims (flaky /
+    poisoned solvers) are built on this.
+    """
+
+    def __init__(self, inner: Solver):
+        self.inner = inner
+
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    @property
+    def caps(self) -> SolverCaps:
+        return self.inner.caps
+
+    def solve(self, suite, runs: int = 64, seed: int = 0,
+              budget: Optional[float] = None,
+              block: int = CHIP_BLOCK) -> SolveReport:
+        return self.inner.solve(suite, runs=runs, seed=seed, budget=budget,
+                                block=block)
+
+
 def as_suite(problems) -> ProblemSuite:
     """Normalize Problem / ProblemSuite / raw (N,N) or (P,N,N) couplings."""
     if isinstance(problems, ProblemSuite):

@@ -97,6 +97,36 @@ class SolveReport:
         }
 
     # -- composition / serialization ---------------------------------------
+    def slice_problems(self, indices) -> "SolveReport":
+        """Row subset of this report (problem-aligned columns sliced).
+
+        The serve tier's supervised flush executor uses this to keep the
+        VALID rows of a partially-corrupted flush (the invalid ones are
+        quarantined and re-dispatched as their own flush): per-problem
+        meta lists (length == problem count) slice along; scalar meta and
+        the additive cost columns (``wall_s``/``compile_s``/``dispatches``)
+        stay whole — the dispatch that produced these rows was paid once,
+        and the re-dispatch of the dropped rows accounts for itself.
+        """
+        idx = [int(i) for i in indices]
+        meta = {}
+        for k, v in self.meta.items():
+            if isinstance(v, list) and len(v) == self.num_problems:
+                meta[k] = [v[i] for i in idx]
+            else:
+                meta[k] = v
+        bk = (None if self.best_known is None
+              else self.best_known[np.asarray(idx, dtype=int)])
+        return SolveReport(
+            solver=self.solver, runs=self.runs,
+            energies=[self.energies[i] for i in idx],
+            best_sigma=[self.best_sigma[i] for i in idx],
+            problem_hashes=tuple(self.problem_hashes[i] for i in idx),
+            sizes=tuple(self.sizes[i] for i in idx),
+            scales=tuple(self.scales[i] for i in idx),
+            wall_s=self.wall_s, compile_s=self.compile_s,
+            dispatches=self.dispatches, meta=meta, best_known=bk)
+
     def merge(self, other: "SolveReport") -> "SolveReport":
         """Concatenate two reports from the same solver — shards of one
         sweep solved on different hosts, or the serve tier's streamed
@@ -143,17 +173,25 @@ class SolveReport:
             meta=meta, best_known=bk)
 
     @classmethod
-    def merge_many(cls, reports) -> "SolveReport":
+    def merge_many(cls, reports, mixed_ok: bool = False) -> "SolveReport":
         """Multi-way ``merge`` in one pass — same semantics as pairwise
         left-folding, but each column is concatenated once, so assembling
         a long stream of per-bucket partials (the serve tier's ``report()``)
-        is linear in the flush count instead of quadratic."""
+        is linear in the flush count instead of quadratic.
+
+        ``mixed_ok`` relaxes the same-solver requirement for streams that
+        legitimately mix backends — the serve tier under degradation, where
+        some flushes fell down the fallback chain. The merged report keeps
+        the first report's solver name; per-problem provenance lives in the
+        meta lists the resilience layer attaches (``solver_by_problem``,
+        ``degraded``), which concatenate in problem order like any other
+        per-problem meta."""
         reports = list(reports)
         if not reports:
             raise ValueError("merge_many needs at least one report")
         first = reports[0]
         for r in reports[1:]:
-            if r.solver != first.solver:
+            if r.solver != first.solver and not mixed_ok:
                 raise ValueError(f"cannot merge reports from "
                                  f"{first.solver!r} and {r.solver!r}")
             if r.runs != first.runs:

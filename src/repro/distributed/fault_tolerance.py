@@ -34,11 +34,22 @@ class StragglerDetector:
     var: float = 0.0
     count: int = 0
     strikes: int = 0
+    warmup: int = 3
+    _m2: float = 0.0                 # Welford accumulator (warmup only)
 
     def observe(self, dt: float) -> bool:
-        if self.count < 3:  # warmup (compile steps)
+        if self.count < self.warmup:  # warmup (compile steps)
+            # Welford over the warmup window seeds BOTH moments — the old
+            # code overwrote `mean` with each sample and left var=0, so the
+            # first post-warmup z-score was computed against no baseline
+            # spread at all (anything a hair above the last warmup sample
+            # hit the 0.05*mean floor instead of a real variance).
             self.count += 1
-            self.mean = dt
+            delta = dt - self.mean
+            self.mean += delta / self.count
+            self._m2 += delta * (dt - self.mean)
+            if self.count == self.warmup:
+                self.var = self._m2 / self.warmup
             return False
         z = (dt - self.mean) / max(np.sqrt(self.var), 1e-6, 0.05 * self.mean)
         self.count += 1

@@ -24,7 +24,7 @@ import threading
 import time
 
 from ..api import Problem
-from ..serve import IsingService
+from ..serve import FaultPlan, IsingService, ResiliencePolicy
 
 
 def build_pool(sizes, density: float, pool: int, seed: int) -> list[Problem]:
@@ -100,6 +100,16 @@ def main():
                          "via api.budget.deadline_to_budget")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the content-hash result cache")
+    ap.add_argument("--chaos", type=float, default=None, metavar="RATE",
+                    help="arm deterministic fault injection at this per-call "
+                         "rate (e.g. 0.1) with the full degradation ladder "
+                         "(retry -> bisect -> breaker -> fallback, watchdog "
+                         "hedging, float64 validation); seeded by --chaos-seed")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault schedule seed (same seed = same chaos run)")
+    ap.add_argument("--fallback", default="tabu-jax,sa-numpy",
+                    help="comma-separated degradation chain tried after the "
+                         "primary solver when --chaos is set")
     args = ap.parse_args()
 
     sizes = [int(s) for s in args.sizes.split(",")]
@@ -107,10 +117,20 @@ def main():
     deadline_s = (args.deadline_ms / 1e3
                   if args.deadline_ms is not None else None)
 
+    resilience = fault_plan = None
+    if args.chaos is not None:
+        fallback = tuple(s for s in args.fallback.split(",") if s)
+        resilience = ResiliencePolicy(
+            fallback=fallback, flush_timeout_s=1.0, min_timeout_s=0.5,
+            breaker_cooldown_s=2.0)
+        fault_plan = FaultPlan.from_rates(seed=args.chaos_seed,
+                                          rate=args.chaos)
+
     with IsingService(solver=args.solver, runs=args.runs, seed=args.seed,
                       max_batch=args.max_batch,
                       max_wait_s=args.max_wait_ms / 1e3,
-                      cache=not args.no_cache) as svc:
+                      cache=not args.no_cache,
+                      resilience=resilience, fault_plan=fault_plan) as svc:
         stats = run_load(svc, pool, args.clients, args.duration,
                          deadline_s=deadline_s, seed=args.seed + 1)
         rep = svc.report()
@@ -120,6 +140,14 @@ def main():
           f"p95 {stats['p95_latency_s'] * 1e3:.1f} ms, "
           f"cache hit {stats['cache_hit_rate']:.1%}, "
           f"{stats['flushes']} flushes -> {stats['dispatches']} dispatches")
+    if args.chaos is not None:
+        r, f = stats["resilience"], stats["faults"]
+        print(f"-- chaos: injected {f['injected']} | "
+              f"retries {r['retries']}, bisections {r['bisections']}, "
+              f"hedges {r['hedges']}, "
+              f"validation rejects {r['validation_failures']}, "
+              f"breaker trips {r['breaker_trips']}, "
+              f"fallback solves {r['fallback_solves']}")
     if rep is not None:
         print(rep.summary())
 

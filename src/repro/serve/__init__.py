@@ -12,8 +12,24 @@ The service keeps the array continuously busy the way the chip does:
 requests queue while a dispatch is in flight, the dynamic batcher coalesces
 everything waiting into pad buckets (the same ``api.batching`` planner the
 offline suite path uses), and each bucket costs exactly one device
-dispatch. See SERVE.md for the architecture and admission policies.
+dispatch. Every flush runs supervised (``serve.resilience``): bounded
+retry, bisection failure isolation, circuit breaker + fallback chain,
+watchdog/hedging, and float64 result validation — with a deterministic
+chaos harness (``serve.faults``) to prove it. See SERVE.md for the
+architecture, admission policies, and the failure model.
 """
+from .faults import (FAULT_KINDS, FaultInjector, FaultPlan, FaultySolver,
+                     InjectedFault, InjectedWorkerCrash)
+from .resilience import (CircuitBreaker, FlushExecutor, FlushFailed,
+                         FlushTimeout, Overloaded, RequestCancelled,
+                         ResiliencePolicy, SolverCrash, validate_row)
 from .service import IsingService, ServeResult, ServeTicket
 
-__all__ = ["IsingService", "ServeResult", "ServeTicket"]
+__all__ = [
+    "IsingService", "ServeResult", "ServeTicket",
+    "ResiliencePolicy", "Overloaded", "RequestCancelled", "SolverCrash",
+    "FlushTimeout", "FlushFailed", "CircuitBreaker", "FlushExecutor",
+    "validate_row",
+    "FaultPlan", "FaultInjector", "FaultySolver", "FAULT_KINDS",
+    "InjectedFault", "InjectedWorkerCrash",
+]

@@ -30,6 +30,19 @@ between problems. Three mechanisms, all riding the shared
   same merge-on-store JSON machinery as the oracle cache, so parallel
   service workers union their entries instead of clobbering.
 
+Flushes do not hit the solver registry directly: every dispatch runs
+under the supervision layer in ``serve.resilience`` (bounded retry,
+failure isolation by bisection, circuit breaker + fallback chain,
+watchdog + hedged re-dispatch, float64 result validation), configured by
+the service's :class:`~repro.serve.resilience.ResiliencePolicy`. Under
+queue pressure the service degrades request budgets down the
+``api.budget.degrade_budget`` ladder before shedding anything, and sheds
+with a typed :class:`~repro.serve.resilience.Overloaded`. A
+:class:`~repro.serve.faults.FaultPlan` injects a deterministic fault
+schedule under the same supervision — the chaos harness in
+``benchmarks/serve_chaos.py`` holds the gate that no faults lose tickets
+or corrupt results.
+
 Every flushed dispatch produces a per-bucket partial ``SolveReport``;
 ``report()`` returns the streamed ``merge`` of all of them, so the service
 exposes the exact same metrics surface (SR/TTS/ETS, dispatch counts,
@@ -48,12 +61,15 @@ from typing import Optional
 import numpy as np
 
 from ..api.batching import CHIP_BLOCK, padded_size
-from ..api.budget import deadline_to_budget
+from ..api.budget import deadline_to_budget, degrade_budget
 from ..api.problem import Problem
 from ..api.registry import get_solver
 from ..api.report import SolveReport
 from ..api.suite import ProblemSuite
 from ..utils import load_json_cache, store_json_cache
+from .faults import FaultInjector, FaultPlan, FaultySolver, corrupt_cache_entry
+from .resilience import (FlushExecutor, Overloaded, RequestCancelled,
+                         ResiliencePolicy, validate_row)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +82,12 @@ class ServeResult:
     batch_size: int               # problems coalesced into the dispatch
     cached: bool                  # served from the result cache (no dispatch)
     budget: Optional[float]       # effective effort multiplier applied
+    degraded: bool = False        # solved below the primary solver tier
+    rescued: bool = False         # a recovery path (retry-after-validation,
+    #                               bisection, tier escalation) re-composed
+    #                               the flush that produced this result
+    solver: str = ""              # tier that actually produced the answer
+    attempts: int = 1             # dispatch attempts of the producing flush
 
     @property
     def best_energy(self) -> float:
@@ -79,6 +101,8 @@ class ServeTicket:
         self._event = threading.Event()
         self._value: Optional[ServeResult] = None
         self._error: Optional[BaseException] = None
+        self._service: Optional["IsingService"] = None
+        self._request: Optional["_Request"] = None
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -90,12 +114,49 @@ class ServeTicket:
             raise self._error
         return self._value
 
+    def cancel(self) -> bool:
+        """Withdraw this request (e.g. its caller timed out and nobody will
+        read the result). Returns True if the cancellation took effect —
+        the request was dequeued before dispatch, or marked for discard
+        while in flight (its slot in the running flush still computes, but
+        the result is dropped, never resolved and never cached under a
+        caller that gave up). Returns False if the ticket had already
+        resolved or failed. After a successful cancel, ``result()`` raises
+        :class:`~repro.serve.resilience.RequestCancelled`."""
+        svc, req = self._service, self._request
+        if svc is None or req is None or self._event.is_set():
+            return False
+        with svc._lock:
+            if self._event.is_set():
+                return False
+            req.cancelled = True
+            reqs = svc._pending.get(req.key)
+            dequeued = False
+            if reqs and req in reqs:
+                reqs.remove(req)
+                dequeued = True
+                if not reqs:
+                    del svc._pending[req.key]
+            svc._cancelled += 1
+        self._fail(RequestCancelled(
+            "request cancelled " +
+            ("before dispatch" if dequeued else "while in flight")))
+        return True
+
     # -- service side ------------------------------------------------------
+    def _bind(self, service: "IsingService", request: "_Request") -> None:
+        self._service = service
+        self._request = request
+
     def _resolve(self, value: ServeResult) -> None:
+        if self._event.is_set():          # lost a race with cancel()
+            return
         self._value = value
         self._event.set()
 
     def _fail(self, error: BaseException) -> None:
+        if self._event.is_set():
+            return
         self._error = error
         self._event.set()
 
@@ -107,6 +168,8 @@ class _Request:
     deadline_s: Optional[float]
     submitted: float              # monotonic
     ticket: ServeTicket
+    key: tuple = ()               # coalescing-group key (set at enqueue)
+    cancelled: bool = False
 
 
 def _budget_tier(budget: Optional[float]) -> Optional[int]:
@@ -126,13 +189,20 @@ class IsingService:
     ``max_wait_s`` queueing time before a non-full bucket flushes anyway.
     ``cache_path=None`` keeps the result cache in-memory only;
     ``cache=False`` disables it entirely (every request dispatches).
+
+    ``resilience`` is the :class:`ResiliencePolicy` for the supervision
+    layer (default: validation + retry on, everything else off — the
+    fault-free path is bit-identical to an unsupervised service).
+    ``fault_plan`` arms deterministic fault injection for chaos runs.
     """
 
     def __init__(self, solver: str = "engine", runs: int = 64,
                  seed: int = 0, block: int = CHIP_BLOCK,
                  max_batch: int = 64, max_wait_s: float = 0.02,
                  cache: bool = True, cache_path: Optional[str] = None,
-                 deadline_reference_s: float = 1.0, **solver_opts):
+                 deadline_reference_s: float = 1.0,
+                 resilience: Optional[ResiliencePolicy] = None,
+                 fault_plan: Optional[FaultPlan] = None, **solver_opts):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_s < 0:
@@ -144,7 +214,19 @@ class IsingService:
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.deadline_reference_s = float(deadline_reference_s)
+        self.policy = resilience if resilience is not None \
+            else ResiliencePolicy()
+        self._injector = FaultInjector(fault_plan)
         self._solver = get_solver(solver, **solver_opts)
+        if fault_plan is not None:
+            self._solver = FaultySolver(self._solver, self._injector)
+        # late-bound primary: tests (and hot solver swaps) may replace
+        # self._solver after construction; the executor always dispatches
+        # to the CURRENT one
+        self._executor = FlushExecutor(
+            self.policy, primary=lambda: self._solver,
+            solver_name=solver, runs=self.runs, seed=self.seed,
+            block=self.block)
         # solver configuration digest: differently configured services
         # sharing a persistent cache_path must never serve each other's
         # results as equivalent (n_sweeps=20 vs 2000 is not the same answer)
@@ -155,6 +237,7 @@ class IsingService:
         self._cache_path = cache_path
         self._cache: dict[str, dict] = (
             load_json_cache(cache_path) if cache and cache_path else {})
+        self._quarantined: set[str] = set()
 
         self._lock = threading.Condition()
         self._pending: dict[tuple, list[_Request]] = {}
@@ -174,6 +257,10 @@ class IsingService:
         self._flushes = 0            # coalesced pad buckets dispatched
         self._dispatches = 0         # device dispatches the solver issued
         self._errors = 0
+        self._cancelled = 0
+        self._shed = 0               # rejected with Overloaded at admission
+        self._degraded_admissions = 0
+        self._cache_quarantined = 0
         self._latencies: collections.deque = collections.deque(maxlen=100_000)
         self._batch_sizes: collections.deque = collections.deque(maxlen=10_000)
 
@@ -190,6 +277,8 @@ class IsingService:
             # the previous run's completions with this run's clock)
             self._submitted = self._completed = self._cache_hits = 0
             self._flushes = self._dispatches = self._errors = 0
+            self._cancelled = self._shed = 0
+            self._degraded_admissions = self._cache_quarantined = 0
             self._latencies.clear()
             self._batch_sizes.clear()
             self._partials = []
@@ -231,6 +320,12 @@ class IsingService:
         ``deadline_s`` maps to an effort budget via ``deadline_to_budget``
         (an explicit ``budget`` overrides the mapping) and also bounds the
         request's queueing time at ``deadline_s / 2``.
+
+        Under queue pressure (``policy.degrade_pending`` /
+        ``policy.shed_pending``) admission degrades the effort budget down
+        the ``degrade_budget`` ladder first, and only past the shed
+        threshold rejects with :class:`Overloaded` — a degraded answer
+        beats no answer, and a typed early rejection beats a timeout.
         """
         with self._lock:
             if not self._running:
@@ -250,9 +345,12 @@ class IsingService:
                 deadline_s, reference_s=self.deadline_reference_s)
         elif budget <= 0:
             raise ValueError(f"budget must be positive, got {budget}")
+        budget = self._admit(budget)
+
         ticket = ServeTicket()
         req = _Request(problem=problem, budget=budget, deadline_s=deadline_s,
                        submitted=time.monotonic(), ticket=ticket)
+        ticket._bind(self, req)
 
         hit = self._cache_lookup(req)
         if hit is not None:
@@ -265,6 +363,7 @@ class IsingService:
             return ticket
 
         key = (padded_size(problem.n, self.block), _budget_tier(budget))
+        req.key = key
         with self._lock:
             if not self._running:
                 raise RuntimeError("service is not running; use "
@@ -275,6 +374,29 @@ class IsingService:
             self._lock.notify_all()
         return ticket
 
+    def _admit(self, budget: Optional[float]) -> Optional[float]:
+        """Overload admission control: shed past ``shed_pending`` queued
+        requests, degrade the effort budget one ladder rung per
+        ``degrade_pending`` of queue depth before that."""
+        p = self.policy
+        if p.degrade_pending is None and p.shed_pending is None:
+            return budget
+        with self._lock:
+            depth = sum(len(v) for v in self._pending.values())
+            if p.shed_pending is not None and depth >= p.shed_pending:
+                self._shed += 1
+                raise Overloaded(
+                    f"service overloaded: {depth} requests queued "
+                    f"(shed threshold {p.shed_pending}); retry with "
+                    f"backoff")
+            if p.degrade_pending is not None and depth >= p.degrade_pending:
+                level = 1 + (depth - p.degrade_pending) // p.degrade_pending
+                degraded = degrade_budget(budget, level)
+                if degraded != (budget if budget is not None else 1.0):
+                    self._degraded_admissions += 1
+                    return degraded
+        return budget
+
     def submit_many(self, problems, **kw) -> list[ServeTicket]:
         return [self.submit(p, **kw) for p in problems]
 
@@ -284,28 +406,35 @@ class IsingService:
         merge happens here, on demand, not per flush; its size (and the
         service's report memory) grows with the number of problems
         dispatched, so long-running deployments that only need counters
-        should read ``stats()`` instead."""
+        should read ``stats()`` instead. Flushes rescued down the fallback
+        chain mix solvers — ``meta["solver_by_problem"]`` and
+        ``meta["degraded"]`` carry per-problem provenance."""
         with self._lock:
             partials = list(self._partials)
         if not partials:
             return None
-        return SolveReport.merge_many(partials)
+        return SolveReport.merge_many(partials, mixed_ok=True)
 
     def stats(self) -> dict:
         """Live service counters: latency percentiles, throughput, cache
-        hit rate, and the coalescing/dispatch ledger."""
+        hit rate, the coalescing/dispatch ledger, and the resilience
+        layer's supervision/fault ledgers."""
         with self._lock:
             lat = np.asarray(self._latencies, dtype=np.float64)
             elapsed = (time.monotonic() - self._started_at
                        if self._started_at else 0.0)
-            return {
+            out = {
                 "submitted": self._submitted,
                 "completed": self._completed,
                 "pending": sum(len(v) for v in self._pending.values()),
                 "errors": self._errors,
+                "cancelled": self._cancelled,
+                "shed": self._shed,
+                "degraded_admissions": self._degraded_admissions,
                 "cache_hits": self._cache_hits,
                 "cache_hit_rate": (self._cache_hits / self._submitted
                                    if self._submitted else 0.0),
+                "cache_quarantined": self._cache_quarantined,
                 "flushes": self._flushes,
                 "dispatches": self._dispatches,
                 "mean_batch": (float(np.mean(self._batch_sizes))
@@ -318,6 +447,9 @@ class IsingService:
                 "problems_per_s": (self._completed / elapsed
                                    if elapsed > 0 else 0.0),
             }
+        out["resilience"] = self._executor.stats()
+        out["faults"] = self._injector.stats()
+        return out
 
     # -- batcher -----------------------------------------------------------
     def _wait_allowance(self, req: _Request) -> float:
@@ -369,38 +501,51 @@ class IsingService:
                 self._solve_batch(reqs)    # new submits keep coalescing
 
     def _solve_batch(self, reqs: list[_Request]) -> None:
-        budgets = [r.budget for r in reqs if r.budget is not None]
-        budget = min(budgets) if budgets else None
-        suite = ProblemSuite([r.problem for r in reqs])
-        try:
-            rep = self._solver.solve(suite, runs=self.runs, seed=self.seed,
-                                     budget=budget, block=self.block)
-        except Exception as e:
-            with self._lock:
-                self._errors += len(reqs)
-            for r in reqs:
-                r.ticket._fail(e)
-            return
-        now = time.monotonic()
-        results = []
-        for i, r in enumerate(reqs):
-            res = ServeResult(
-                problem_hash=r.problem.content_hash,
-                energies=np.asarray(rep.energies[i], dtype=np.float64),
-                sigma=np.asarray(rep.best_sigma[i], dtype=np.int8),
-                latency_s=now - r.submitted, batch_size=len(reqs),
-                cached=False, budget=budget)
-            results.append(res)
-            self._cache_store(r, res)
         with self._lock:
-            self._partials.append(rep)
+            # requests cancelled after being popped from the queue are
+            # discarded here, before the dispatch is sized
+            live = [r for r in reqs if not r.cancelled]
+        if not live:
+            return
+        outcomes, partials, dispatches = self._executor.execute(live)
+        now = time.monotonic()
+        results: list[Optional[ServeResult]] = []
+        for r, o in zip(live, outcomes):
+            if not o.ok:
+                results.append(None)
+                continue
+            results.append(ServeResult(
+                problem_hash=r.problem.content_hash,
+                energies=o.energies, sigma=o.sigma,
+                latency_s=now - r.submitted, batch_size=len(live),
+                cached=False, budget=r.budget, degraded=o.degraded,
+                rescued=o.rescued, solver=o.solver, attempts=o.attempts))
+        for r, res in zip(live, results):
+            # degraded results answer the caller but never poison the
+            # cache: they were produced below the primary tier, and the
+            # cache key promises the primary solver's answer
+            if res is not None and not res.degraded and not r.cancelled:
+                self._cache_store(r, res)
+        with self._lock:
+            self._partials.extend(partials)
             self._flushes += 1
-            self._dispatches += rep.dispatches
-            self._completed += len(reqs)
-            self._batch_sizes.append(len(reqs))
-            self._latencies.extend(res.latency_s for res in results)
-        for r, res in zip(reqs, results):
-            r.ticket._resolve(res)
+            self._dispatches += dispatches
+            self._batch_sizes.append(len(live))
+            for r, res in zip(live, results):
+                if r.cancelled:
+                    continue
+                if res is None:
+                    self._errors += 1
+                else:
+                    self._completed += 1
+                    self._latencies.append(res.latency_s)
+        for r, o, res in zip(live, outcomes, results):
+            if r.cancelled:
+                continue
+            if res is None:
+                r.ticket._fail(o.error)
+            else:
+                r.ticket._resolve(res)
 
     # -- result cache ------------------------------------------------------
     def _cache_key(self, problem: Problem) -> str:
@@ -410,8 +555,9 @@ class IsingService:
     def _cache_lookup(self, req: _Request) -> Optional[ServeResult]:
         if not self._cache_enabled:
             return None
+        key = self._cache_key(req.problem)
         with self._lock:
-            entry = self._cache.get(self._cache_key(req.problem))
+            entry = self._cache.get(key)
         if entry is None:
             return None
         # an entry only serves requests asking for <= its effort
@@ -419,10 +565,22 @@ class IsingService:
         want = req.budget if req.budget is not None else 1.0
         if have < want - 1e-9:
             return None
+        energies = np.asarray(entry.get("energies", ()), dtype=np.float64)
+        sigma = np.asarray(entry.get("sigma", ()), dtype=np.int8)
+        if self.policy.validate and not validate_row(
+                req.problem, energies, sigma,
+                self.policy.validate_atol, self.policy.validate_rtol):
+            # corrupt entry (torn write, bit rot, injected fault): quarantine
+            # — evict from memory AND remember the key so _persist_cache
+            # drops it from disk instead of merge-resurrecting it
+            with self._lock:
+                self._cache.pop(key, None)
+                self._quarantined.add(key)
+                self._cache_quarantined += 1
+            return None
         return ServeResult(
             problem_hash=req.problem.content_hash,
-            energies=np.asarray(entry["energies"], dtype=np.float64),
-            sigma=np.asarray(entry["sigma"], dtype=np.int8),
+            energies=energies, sigma=sigma,
             latency_s=time.monotonic() - req.submitted,
             batch_size=0, cached=True, budget=entry.get("budget"))
 
@@ -434,14 +592,22 @@ class IsingService:
                "energies": [float(e) for e in res.energies],
                "sigma": [int(s) for s in res.sigma],
                "n": req.problem.n}
+        if self._injector.draw("cache") == "corrupt_cache_write":
+            new = corrupt_cache_entry(
+                new, self._injector.injected["corrupt_cache_write"])
         with self._lock:
             old = self._cache.get(key)
             self._cache[key] = _higher_effort(old, new) if old else new
 
     def _persist_cache(self) -> None:
-        if self._cache_enabled and self._cache_path and self._cache:
-            store_json_cache(self._cache_path, self._cache,
-                             resolve=_higher_effort)
+        if not (self._cache_enabled and self._cache_path):
+            return
+        with self._lock:
+            cache = dict(self._cache)
+            drop = tuple(self._quarantined)
+        if cache or drop:
+            store_json_cache(self._cache_path, cache,
+                             resolve=_higher_effort, drop=drop)
 
 
 def _higher_effort(old: dict, new: dict) -> dict:

@@ -67,12 +67,21 @@ def load_json_cache(path: str) -> dict:
 
 
 def store_json_cache(path: str, cache: dict,
-                     resolve: Optional[Callable] = None) -> None:
+                     resolve: Optional[Callable] = None,
+                     drop=()) -> None:
     """Merge ``cache`` into the file at ``path`` atomically.
 
     Keys present only on disk survive (another writer's entries are never
     clobbered); keys present in both go to ``resolve(disk_value, value)``
     — default: the caller's value wins (fresh computation beats stale).
+
+    ``drop`` names keys whose ON-DISK value must not survive the merge —
+    the serve tier's corrupt-result quarantine: a validated-bad entry is
+    evicted from memory, but a plain merge would resurrect it from disk
+    (and ``resolve`` could even prefer it, e.g. a corrupt high-budget entry
+    beating its clean low-budget replacement). Dropped keys are removed
+    from the disk view before merging, so a replacement in ``cache`` lands
+    without a conflict and a key with no replacement disappears.
     """
     try:
         parent = os.path.dirname(path)
@@ -80,6 +89,8 @@ def store_json_cache(path: str, cache: dict,
             os.makedirs(parent, exist_ok=True)
         with _store_lock(path):
             disk = load_json_cache(path)
+            for key in drop:
+                disk.pop(key, None)
             merged = dict(disk)
             for key, val in cache.items():
                 if resolve is not None and key in disk:

@@ -3,6 +3,8 @@ cache, merge-on-store caches, streamed-report merge, LM-driver shim."""
 import importlib
 import json
 import sys
+import threading
+import time
 import warnings
 
 import numpy as np
@@ -252,6 +254,156 @@ def test_oracle_store_keeps_lower_energy_on_conflict(tmp_path):
     # heuristic bound must persist its method or it recomputes forever
     _store(path, {"h1": {"energy": -8.0, "method": "brute_force"}})
     assert load_json_cache(path)["h1"]["method"] == "brute_force"
+
+
+# -- failure isolation (satellite: flush blast radius regression) ------------
+
+class _PoisonWrap:
+    """Solver wrapper failing any dispatch whose suite contains ``poison``;
+    clean dispatches delegate."""
+
+    def __init__(self, inner, poison_hash):
+        self.inner = inner
+        self.poison = poison_hash
+        self.caps = inner.caps
+
+    def solve(self, suite, **kw):
+        if any(p.content_hash == self.poison for p in suite.problems):
+            raise RuntimeError("poisoned request in flush")
+        return self.inner.solve(suite, **kw)
+
+
+def test_poisoned_request_does_not_fail_flush_mates():
+    """Regression: one bad request in a coalesced flush must be bisected
+    out, not take down every ticket in the batch (the old _solve_batch
+    caught one exception and failed ALL coalesced requests)."""
+    from repro.serve import FlushFailed
+    probs = [Problem.random_qubo(12, 0.5, seed=500 + i) for i in range(4)]
+    svc = IsingService(solver="sa-numpy", runs=RUNS, seed=SEED, block=16,
+                       cache=False, max_batch=len(probs), max_wait_s=5.0)
+    svc._solver = _PoisonWrap(svc._solver, probs[2].content_hash)
+    with svc:
+        tickets = svc.submit_many(probs)
+        svc.stop()                       # drain flushes the full batch
+        results = []
+        for i, t in enumerate(tickets):
+            if i == 2:
+                with pytest.raises(FlushFailed):
+                    t.result(timeout=300)
+            else:
+                results.append(t.result(timeout=300))
+    assert len(results) == 3             # flush-mates all answered
+    assert all(r.rescued for r in results)
+    stats = svc.stats()
+    assert stats["errors"] == 1 and stats["completed"] == 3
+    assert stats["resilience"]["bisections"] >= 1
+
+
+# -- ticket cancellation (satellite) ------------------------------------------
+
+def test_cancel_dequeues_before_dispatch():
+    from repro.serve import RequestCancelled
+    p = Problem.random_qubo(12, 0.5, seed=510)
+    with IsingService(solver="sa-numpy", runs=RUNS, seed=SEED, block=16,
+                      cache=False, max_batch=8, max_wait_s=5.0) as svc:
+        t = svc.submit(p)
+        assert svc.stats()["pending"] == 1
+        assert t.cancel() is True
+        assert svc.stats()["pending"] == 0       # dequeued, never dispatched
+        with pytest.raises(RequestCancelled, match="before dispatch"):
+            t.result(timeout=10)
+        assert t.cancel() is False               # already settled
+        stats = svc.stats()
+    assert stats["cancelled"] == 1
+    assert stats["flushes"] == 0 and stats["dispatches"] == 0
+
+
+def test_cancel_in_flight_discards_result():
+    from repro.serve import RequestCancelled
+
+    class _SlowWrap:
+        def __init__(self, inner, started):
+            self.inner = inner
+            self.caps = inner.caps
+            self.started = started
+
+        def solve(self, suite, **kw):
+            self.started.set()
+            time.sleep(0.4)
+            return self.inner.solve(suite, **kw)
+
+    p = Problem.random_qubo(12, 0.5, seed=511)
+    started = threading.Event()
+    svc = IsingService(solver="sa-numpy", runs=RUNS, seed=SEED, block=16,
+                       cache=True, max_batch=1, max_wait_s=0.0)
+    svc._solver = _SlowWrap(svc._solver, started)
+    with svc:
+        t = svc.submit(p)
+        assert started.wait(timeout=30)          # dispatch is in flight
+        assert t.cancel() is True                # mark-discard path
+        with pytest.raises(RequestCancelled, match="in flight"):
+            t.result(timeout=10)
+        svc.stop()
+        stats = svc.stats()
+    assert stats["cancelled"] == 1
+    assert stats["completed"] == 0               # result discarded...
+    assert stats["flushes"] == 1                 # ...though the flush ran
+    # a caller that gave up must not populate the cache either
+    assert svc._cache == {}
+
+
+# -- serve-cache corruption quarantine (satellite) ----------------------------
+
+def test_corrupt_cache_entry_quarantined_and_not_resurrected(tmp_path):
+    path = str(tmp_path / "serve_cache.json")
+    p = Problem.random_qubo(13, 0.5, seed=520)
+    common = dict(solver="sa-numpy", runs=RUNS, seed=SEED, block=16,
+                  max_batch=1, max_wait_s=0.0, cache_path=path)
+    with IsingService(**common) as svc:
+        first = svc.submit(p).result(timeout=300)
+    # corrupt the persisted entry the way a torn write would: truncate
+    # the spin payload
+    entries = json.load(open(path))
+    (key, entry), = entries.items()
+    entry["sigma"] = entry["sigma"][:-3]
+    json.dump(entries, open(path, "w"))
+
+    with IsingService(**common) as svc2:
+        res = svc2.submit(p).result(timeout=300)
+        stats = svc2.stats()
+    assert not res.cached                        # corrupt hit rejected
+    assert stats["cache_quarantined"] == 1
+    assert stats["dispatches"] == 1              # re-solved fresh
+    np.testing.assert_array_equal(res.energies, first.energies)
+    # the persisted file now holds the CLEAN replacement — a plain
+    # merge-on-store would have resurrected (or preferred) the corrupt one
+    disk = json.load(open(path))
+    assert list(disk) == [key]
+    assert len(disk[key]["sigma"]) == p.n
+    with IsingService(**common) as svc3:
+        assert svc3.submit(p).result(timeout=60).cached
+
+
+def test_truncated_cache_file_cold_restart_no_data_loss(tmp_path):
+    path = str(tmp_path / "serve_cache.json")
+    p = Problem.random_qubo(13, 0.5, seed=521)
+    common = dict(solver="sa-numpy", runs=RUNS, seed=SEED, block=16,
+                  max_batch=1, max_wait_s=0.0, cache_path=path)
+    with IsingService(**common) as svc:
+        svc.submit(p).result(timeout=300)
+    # kill -9 mid-write, old-style: the file is half a JSON document
+    raw = open(path).read()
+    open(path, "w").write(raw[: len(raw) // 2])
+
+    with IsingService(**common) as svc2:         # cold restart: loads clean
+        res = svc2.submit(p).result(timeout=300)
+        stats = svc2.stats()
+    assert not res.cached and stats["dispatches"] == 1
+    # the truncated payload was moved aside, and the next _persist_cache
+    # wrote a fresh valid file — no data loss, no permanent shadowing
+    assert json.load(open(path))                 # parses again
+    import os
+    assert os.path.exists(path + ".corrupt")
 
 
 # -- LM driver rename shim ---------------------------------------------------
