@@ -14,9 +14,10 @@ import argparse
 import sys
 import traceback
 
-from . import (fig4_success, fig4_trajectories, fig5_sr_density, fig5_tts,
-               kernel_throughput, roofline_bench, serve_chaos,
-               serve_throughput, solver_matrix, table2_ets, workloads)
+from . import (device_robustness, fig4_success, fig4_trajectories,
+               fig5_sr_density, fig5_tts, kernel_throughput, roofline_bench,
+               serve_chaos, serve_throughput, solver_matrix, table2_ets,
+               workloads)
 
 ALL = {
     "fig4_trajectories": fig4_trajectories.run,
@@ -29,6 +30,7 @@ ALL = {
     "solver_matrix": solver_matrix.run,
     "serve_throughput": serve_throughput.run,
     "serve_chaos": serve_chaos.run,
+    "device_robustness": device_robustness.run,
     "workloads": workloads.run,
 }
 

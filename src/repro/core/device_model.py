@@ -8,6 +8,7 @@ perturbation" noise used for the measured-baseline comparison of Fig. 4.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax.numpy as jnp
@@ -53,6 +54,19 @@ class DeviceModel:
     @property
     def slots_per_sweep(self) -> int:
         return self.cols_per_tile
+
+    @property
+    def has_leakage(self) -> bool:
+        """True when CU gate leakage actually decays programmed coefficients
+        (a positive, finite time constant). ``tau_leak_sweeps = inf`` models
+        ideal refresh (the gradient-descent baseline); nonpositive values
+        are treated the same. This is THE leakage predicate — the schedule
+        (``perturbation.scales_from_cols``), the integer-fast-path gate
+        (``perturbation.unit_scales``), the autotune cache key
+        (``engine.AnnealEngine._key``) and the physics tier's per-chip
+        tau-spread sampling all branch on it; re-deriving it inline is how
+        the call sites used to drift."""
+        return self.tau_leak_sweeps > 0 and math.isfinite(self.tau_leak_sweeps)
 
     @property
     def n_steps(self) -> int:

@@ -105,8 +105,17 @@ class AnnealEngine:
 
     # -- planning ----------------------------------------------------------
     def _key(self, P: int, R: int, N: int, j_dtype: str) -> str:
-        sched = "unit" if unit_scales(self.device, self.perturbation) else \
-            ("pert" if self.perturbation.enabled else "leak")
+        # schedule kind from the shared predicates (DeviceModel.has_leakage
+        # + PerturbationConfig.enabled) — "unit" is exactly their conjunction
+        # being false/false, so the cache key can never disagree with the
+        # unit_scales() fast-path gate.
+        if unit_scales(self.device, self.perturbation):
+            sched = "unit"
+        elif self.perturbation.enabled:
+            sched = "pert"
+        else:
+            assert self.device.has_leakage
+            sched = "leak"
         return (f"{jax.default_backend()}|N={N}|R={R}|P={P}"
                 f"|j={j_dtype}|sched={sched}")
 

@@ -21,7 +21,6 @@ is the stalest — exactly the chip's load-then-anneal sequencing.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax.numpy as jnp
 
@@ -59,20 +58,33 @@ DEFAULT_PERTURBATION = PerturbationConfig()
 
 
 def scales_from_cols(step, col_ids, dev: DeviceModel, pert: PerturbationConfig,
-                     dtype=jnp.float32):
+                     dtype=jnp.float32, *, tau_leak_sweeps=None,
+                     slot_offset=None):
     """Closed-form column scales for an arbitrary-shaped array of column
     indices — the SINGLE implementation shared by the host-side
-    ``column_scales`` (1-D ``arange``) and the Pallas fused kernel (2-D
-    ``broadcasted_iota``; TPU forbids 1-D iota). Sharing the exact op
-    sequence is what makes the in-kernel schedule bit-identical to the
-    precomputed ``schedule_table`` oracle.
+    ``column_scales`` (1-D ``arange``), the Pallas fused kernel (2-D
+    ``broadcasted_iota``; TPU forbids 1-D iota), and the physics tier's
+    virtual-chip fleet. Sharing the exact op sequence is what makes the
+    in-kernel schedule bit-identical to the precomputed ``schedule_table``
+    oracle.
 
     step: int32 scalar (may be traced). col_ids: int32 array of column
-    indices, any shape; the result has ``col_ids.shape``.
+    indices, any shape; the result broadcasts ``col_ids.shape`` against the
+    optional per-chip overrides:
+
+    tau_leak_sweeps: traced override of ``dev.tau_leak_sweeps`` (the
+        physics tier sweeps a per-chip leakage spread inside one dispatch).
+        Broadcasts against ``col_ids``; nonpositive entries mean no decay.
+        ``None`` keeps the nominal static schedule — the default path is
+        UNCHANGED op-for-op, which the engine/kernel parity tests pin.
+    slot_offset: traced int32 refresh-pointer phase offset in column slots
+        (per-chip refresh-cadence jitter). Broadcasts against ``col_ids``.
     """
     C = dev.cols_per_tile
     step = jnp.asarray(step, dtype=jnp.int32)
     slot = step // dev.substeps
+    if slot_offset is not None:
+        slot = slot + jnp.asarray(slot_offset, dtype=jnp.int32)
 
     j = col_ids % C                                 # column phase within tile
     d = jnp.mod(slot - j, C)                        # slots since last selection
@@ -88,9 +100,18 @@ def scales_from_cols(step, col_ids, dev: DeviceModel, pert: PerturbationConfig,
     else:
         rails_off = jnp.zeros(col_ids.shape, dtype=bool)
 
-    # Leakage decay by age (in slots) since last programming.
+    # Leakage decay by age (in slots) since last programming. ``last_sel``
+    # lives in the (possibly jittered) slot clock, so the fractional step
+    # clock gets the same offset — age stays in [0, C] either way.
     age_slots = (step.astype(dtype) / dev.substeps) - last_sel.astype(dtype)
-    if dev.tau_leak_sweeps > 0 and math.isfinite(dev.tau_leak_sweeps):
+    if slot_offset is not None:
+        age_slots = age_slots + jnp.asarray(slot_offset, dtype=dtype)
+    if tau_leak_sweeps is not None:
+        tau = jnp.asarray(tau_leak_sweeps, dtype=dtype)
+        safe = jnp.where(tau > 0, tau, jnp.ones((), dtype=dtype))
+        decay = jnp.where(tau > 0, jnp.exp(-age_slots / (C * safe)),
+                          jnp.ones((), dtype=dtype))
+    elif dev.has_leakage:
         decay = jnp.exp(-age_slots / (C * dev.tau_leak_sweeps))
     else:
         decay = jnp.ones(col_ids.shape, dtype=dtype)
@@ -102,9 +123,7 @@ def unit_scales(dev: DeviceModel, pert: PerturbationConfig) -> bool:
     no DAC gating and no (finite) leakage. In that regime the anneal is pure
     gradient descent and integer fast paths (int8 spins x int8 J on the MXU)
     are exact. Drives the AnnealEngine's j_dtype auto-selection."""
-    no_leak = not (dev.tau_leak_sweeps > 0 and
-                   math.isfinite(dev.tau_leak_sweeps))
-    return (not pert.enabled) and no_leak
+    return (not pert.enabled) and not dev.has_leakage
 
 
 def column_scales(step, dev: DeviceModel, pert: PerturbationConfig,

@@ -107,9 +107,13 @@ def main():
                          "hedging, float64 validation); seeded by --chaos-seed")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="fault schedule seed (same seed = same chaos run)")
-    ap.add_argument("--fallback", default="tabu-jax,sa-numpy",
+    ap.add_argument("--fallback", default="tabu-jax,ode-jax,sa-numpy",
                     help="comma-separated degradation chain tried after the "
-                         "primary solver when --chaos is set")
+                         "primary solver when --chaos is set (ode-jax — the "
+                         "analog device-physics tier — rides the chain as a "
+                         "dynamics-diverse rung: a poisoned flush that "
+                         "crashes the discrete paths re-solves on the "
+                         "continuous integrator)")
     args = ap.parse_args()
 
     sizes = [int(s) for s in args.sizes.split(",")]

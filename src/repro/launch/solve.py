@@ -17,6 +17,12 @@
     PYTHONPATH=src python -m repro.launch.solve --solver tabu-jax \
         --spins 48 --problems 8 --runs 64
 
+    # analog device-physics tier: a 256-virtual-chip robustness sweep
+    # (per-chip coupling mismatch + leakage spread) in one dispatch
+    PYTHONPATH=src python -m repro.launch.solve --solver ode-jax \
+        --spins 64 --problems 2 --runs 8 --chips 256 \
+        --mismatch-sigma 0.1 --tau-leak-spread 0.3
+
 Any registered solver (``--list-solvers``) runs behind the same
 Problem/Suite/Report surface; the best-known oracle is disk-cached by
 problem content hash (``--no-cache`` bypasses) and refreshed by the
@@ -63,7 +69,8 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
           seed: int = 0, solver: str = "engine", backend: str = "auto",
           perturbation: bool = True, autotune: bool = False,
           budget: float | None = None, use_cache: bool = True,
-          workload: str = "random-qubo"):
+          workload: str = "random-qubo", chips: int = 1,
+          mismatch_sigma: float = 0.0, tau_leak_spread: float = 0.0):
     """Solve one workload cell through the registry; returns
     ``(report, suite)`` — the oracle-attached
     :class:`repro.api.SolveReport` plus the suite it solved (callers need
@@ -75,6 +82,13 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
                     variant="perturbation" if perturbation else "gd")
     elif solver == "chip-lns":
         opts = dict(backend=backend)
+    elif solver == "ode-jax":
+        from ..physics import VariationModel
+        opts = dict(variant="perturbation" if perturbation else "gd",
+                    n_chips=chips,
+                    variation=VariationModel(
+                        j_mismatch_sigma=mismatch_sigma,
+                        tau_leak_spread=tau_leak_spread))
     return solve_suite(suite, solver=solver, runs=runs, seed=seed + 1,
                        budget=budget, use_cache=use_cache, **opts), suite
 
@@ -122,6 +136,16 @@ def main():
                          "this workload and persist the winner")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the disk-backed best-known oracle cache")
+    ap.add_argument("--chips", type=int, default=1,
+                    help="[ode-jax] virtual-chip fleet size: every chip "
+                         "gets its own seeded variation draw and all "
+                         "chips x runs ride ONE dispatch per pad bucket")
+    ap.add_argument("--mismatch-sigma", type=float, default=0.0,
+                    help="[ode-jax] per-cell multiplicative coupling "
+                         "mismatch sigma (J_eff = J * (1 + sigma*z))")
+    ap.add_argument("--tau-leak-spread", type=float, default=0.0,
+                    help="[ode-jax] lognormal spread of the gate-leak "
+                         "time constant across chips")
     args = ap.parse_args()
 
     if args.list_solvers:
@@ -137,7 +161,9 @@ def main():
         solver=args.solver, backend=args.backend,
         perturbation=not args.no_perturbation, autotune=args.autotune,
         budget=args.budget, use_cache=not args.no_cache,
-        workload=args.workload)
+        workload=args.workload, chips=args.chips,
+        mismatch_sigma=args.mismatch_sigma,
+        tau_leak_spread=args.tau_leak_spread)
     plan = report.meta.get("engine_plan")
     if plan:
         print(f"[engine] path={plan['path']} block_r={plan['block_r']} "

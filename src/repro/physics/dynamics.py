@@ -1,0 +1,265 @@
+"""Continuous-time analog device dynamics — the physics tier's integrator.
+
+The discrete engine (``core.annealer`` / the fused Pallas kernel) abstracts
+the chip to threshold logic: a 1-bit ADC reads each capacitor and the node
+update is a hard-sign Euler step. Analog Ising machines (BRIM
+arXiv:2007.06665, the memristor-MTJ intrinsic annealer arXiv:2506.14676)
+are better described as coupled nodal ODEs with a saturating nonlinearity,
+a bistable latch, RC relaxation, and thermal noise. This module integrates
+exactly that, in the chip's own voltage coordinates:
+
+    C dv_i/dt = a * sum_j s_j(t) * Jg_ij * sig_g(v_j)     (coupling drive)
+              + latch * u_i (1 - u_i^2) * vdd/2           (bistable latch)
+              - (v_i - vdd/2) / tau_rc                    (RC relaxation)
+              + xi_i(t),   u = (v - vdd/2) / (vdd/2)      (thermal noise)
+
+with ``s(t)`` the SAME closed-form column-refresh / leakage / perturbation
+schedule the discrete paths use (``core.perturbation.scales_from_cols``) —
+per-chip leakage spread and refresh jitter ride its traced overrides — and
+``sig_g`` a tanh of gain ``g`` (``g = inf`` is the hard 1-bit ADC).
+Integration is fixed-step Euler–Maruyama or stochastic Heun under one
+``lax.scan``, vmapped over (chips x problems x restarts): a whole
+variation-aware virtual-chip fleet is ONE device dispatch per pad bucket.
+
+Discrete-limit contract (pinned by tests and the BENCH_device CI gate):
+with ``DISCRETE_LIMIT`` params (hard ADC, no latch, no RC, no noise) and a
+trivial fleet, the integrator reproduces the discrete engine's scan path
+op-for-op — same schedule call, same scale folding, same matvec grouping,
+same clip — so final spins are bit-identical to ``core.annealer.anneal``.
+
+Energies are reported against the NOMINAL couplings: the imperfect chip is
+still being asked to solve the ideal problem, which is precisely the
+robustness question the paper's single die cannot answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.device_model import DeviceModel
+from ..core.hamiltonian import ising_energy
+from ..core.perturbation import (PerturbationConfig, column_scales,
+                                 scales_from_cols)
+from .variation import ChipVariation
+
+_INTEGRATORS = ("em", "heun")
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicsParams:
+    """Static knobs of the analog node model (hashable — jit-static).
+
+    gain: sigma-nonlinearity gain; ``inf`` collapses tanh to the chip's
+        hard 1-bit inverter ADC (the discrete limit).
+    latch: bistable cross-coupled-latch restoring strength per sweep — a
+        double-well drift ``u(1-u^2)`` stable at the rails, unstable at
+        threshold. 0 disables.
+    tau_rc_sweeps: RC relaxation of the node capacitor toward vdd/2
+        (finite output impedance). ``inf`` disables.
+    noise_sigma: thermal-noise amplitude in volts per sqrt(sweep),
+        integrated Euler–Maruyama style (``sqrt(dt)`` scaling); per-chip
+        RNG streams via ``fold_in(key, step, chip)``.
+    integrator: 'em' (Euler–Maruyama) or 'heun' (stochastic Heun — the
+        deterministic drift gets a predictor/corrector pass, the noise
+        increment is shared, halving the O(dt) bias of stiff corners).
+    """
+
+    gain: float = 8.0
+    latch: float = 0.5
+    tau_rc_sweeps: float = float("inf")
+    noise_sigma: float = 0.0
+    integrator: str = "em"
+
+    def __post_init__(self):
+        if self.integrator not in _INTEGRATORS:
+            raise ValueError(f"unknown integrator {self.integrator!r}; "
+                             f"choose from {_INTEGRATORS}")
+        if not self.gain > 0:
+            raise ValueError(f"gain must be positive, got {self.gain}")
+        if self.latch < 0 or self.noise_sigma < 0:
+            raise ValueError(f"latch/noise_sigma must be nonnegative: {self}")
+
+    @property
+    def hard_adc(self) -> bool:
+        return math.isinf(self.gain)
+
+    @property
+    def has_rc(self) -> bool:
+        return self.tau_rc_sweeps > 0 and math.isfinite(self.tau_rc_sweeps)
+
+
+#: hardware-realistic defaults: saturating nodes + a mild latch.
+DEFAULT_PHYSICS = PhysicsParams()
+
+#: the regime where the ODE tier must agree with the discrete engine
+#: bit-for-bit (hard ADC, no latch, no RC, no noise, plain Euler).
+DISCRETE_LIMIT = PhysicsParams(gain=float("inf"), latch=0.0,
+                               tau_rc_sweeps=float("inf"), noise_sigma=0.0,
+                               integrator="em")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetResult:
+    """One fleet anneal: chip axis leading, then (problems, runs, spins)."""
+    v_final: jax.Array       # (C, P, R, N) final capacitor voltages
+    sigma: jax.Array         # (C, P, R, N) readout spins (+-1 float32)
+    energy: jax.Array        # (C, P, R) Ising energy vs the NOMINAL J
+
+
+# module-level dispatch ledger: the robustness benchmark asserts the whole
+# fleet surface costs one device dispatch per pad bucket through this.
+_dispatches = 0
+
+
+def dispatch_count() -> int:
+    return _dispatches
+
+
+def reset_dispatch_count() -> None:
+    global _dispatches
+    _dispatches = 0
+
+
+def _column_schedule(t, dev: DeviceModel, pert: PerturbationConfig,
+                     n_cols: int, chips: Optional[ChipVariation],
+                     varied: bool):
+    """Per-column coupling scales, (1, N) nominal or (C, N) per-chip.
+
+    The nominal branch calls ``column_scales`` verbatim — the exact op
+    sequence of the discrete scan path, which is what makes the
+    discrete-limit parity bitwise. The varied branch rides the traced
+    overrides of the SAME ``scales_from_cols`` derivation.
+    """
+    if not varied:
+        return column_scales(t, dev, pert, n_cols=n_cols)[None, :]
+    col_ids = jnp.arange(n_cols, dtype=jnp.int32)[None, :]
+    tau = None
+    if dev.has_leakage:
+        tau = dev.tau_leak_sweeps * chips.tau_scale[:, None]
+    return scales_from_cols(t, col_ids, dev, pert, tau_leak_sweeps=tau,
+                            slot_offset=chips.slot_offset[:, None])
+
+
+def _node_output(v, dev: DeviceModel, params: PhysicsParams, gain_scale):
+    """sig_g(v): the node nonlinearity each neighbor sees, (C, P, R, N)."""
+    if params.hard_adc:
+        # the discrete engine's exact ADC ops (int8 then f32)
+        q8 = jnp.where(v >= dev.threshold, 1, -1).astype(jnp.int8)
+        return q8.astype(jnp.float32)
+    u = (v - dev.threshold) / dev.threshold
+    g = params.gain if gain_scale is None else params.gain * gain_scale
+    return jnp.tanh(g * u)
+
+
+def _drift(v, t, J_eff, dev: DeviceModel, pert: PerturbationConfig,
+           params: PhysicsParams, chips, varied: bool, gain_scale):
+    """Deterministic dv for one Euler step (dt already folded in)."""
+    n = J_eff.shape[-1]
+    # schedule scales with drive*dt folded in OUTSIDE the matvec — the
+    # discrete scan path's exact grouping (core.annealer._step)
+    s = _column_schedule(t, dev, pert, n, chips, varied) \
+        * (dev.drive_eff * dev.dt)
+    q = _node_output(v, dev, params, gain_scale)
+    sq = (q * s[:, None, None, :]).astype(J_eff.dtype)
+    dv = jnp.einsum("cpij,cprj->cpri", J_eff, sq,
+                    preferred_element_type=jnp.float32)
+    if params.latch > 0:
+        u = (v - dev.threshold) / dev.threshold
+        dv = dv + (params.latch * dev.dt * dev.threshold) \
+            * u * (1.0 - u * u)
+    if params.has_rc:
+        dv = dv + (dev.dt / params.tau_rc_sweeps) * (dev.threshold - v)
+    return dv
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dev", "pert", "params", "varied"))
+def _fleet_anneal(J, v0, chips, key, dev: DeviceModel,
+                  pert: PerturbationConfig, params: PhysicsParams,
+                  varied: bool) -> FleetResult:
+    J = jnp.asarray(J, jnp.float32)
+    v0 = jnp.asarray(v0, jnp.float32)
+    # loop-invariant cast outside the scan, like the discrete scan path
+    Jc = J.astype(jnp.dtype(dev.compute_dtype))
+    if varied:
+        C = chips.tau_scale.shape[0]
+        J_eff = Jc[None] * chips.j_gain[:, None].astype(Jc.dtype)
+        gain_scale = (None if params.hard_adc
+                      else chips.gain_scale[:, None, None, None])
+    else:
+        C = 1
+        J_eff = Jc[None]
+        gain_scale = None
+    v = jnp.broadcast_to(v0[None], (C,) + v0.shape)
+    use_noise = params.noise_sigma > 0
+    sqrt_dt = math.sqrt(dev.dt)
+
+    def body(v, t):
+        dv = _drift(v, t, J_eff, dev, pert, params, chips, varied,
+                    gain_scale)
+        if params.integrator == "heun":
+            v_pred = jnp.clip(v + dv, 0.0, dev.vdd)
+            dv2 = _drift(v_pred, t + 1, J_eff, dev, pert, params, chips,
+                         varied, gain_scale)
+            dv = 0.5 * (dv + dv2)
+        if use_noise:
+            # per-(step, chip) streams: chip c's noise depends only on
+            # (key, t, c) — independent across the vmap axis, and stable
+            # as the fleet grows
+            k_t = jax.random.fold_in(key, t)
+
+            def chip_noise(c):
+                return jax.random.normal(jax.random.fold_in(k_t, c),
+                                         v.shape[1:], v.dtype)
+            z = jax.vmap(chip_noise)(jnp.arange(C, dtype=jnp.int32))
+            dv = dv + (params.noise_sigma * sqrt_dt) * z
+        return jnp.clip(v + dv, 0.0, dev.vdd), None
+
+    v, _ = jax.lax.scan(body, v, jnp.arange(dev.n_steps, dtype=jnp.int32))
+    sigma = dev.adc(v)                     # sign of the soft spin at readout
+    energy = ising_energy(J[None], sigma)  # vs NOMINAL J — the ideal problem
+    return FleetResult(v_final=v, sigma=sigma, energy=energy)
+
+
+def fleet_anneal(J, v0, dev: DeviceModel, pert: PerturbationConfig,
+                 params: PhysicsParams = DEFAULT_PHYSICS,
+                 chips: Optional[ChipVariation] = None,
+                 key: Optional[jax.Array] = None) -> FleetResult:
+    """Integrate the analog fleet. ONE device dispatch per call.
+
+    J: (P, N, N) nominal level-space couplings; v0: (P, R, N) initial
+    voltages; chips: per-chip variation draws (``None`` = one nominal
+    chip — the chip axis of the result has length 1). key: PRNG key,
+    required iff ``params.noise_sigma > 0``.
+    """
+    global _dispatches
+    J = np.asarray(J, dtype=np.float32)
+    if J.ndim == 2:
+        J = J[None]
+    v0 = np.asarray(v0, dtype=np.float32)
+    if v0.ndim == 2:
+        v0 = np.broadcast_to(v0[None], (J.shape[0],) + v0.shape)
+    if params.noise_sigma > 0 and key is None:
+        raise ValueError("params.noise_sigma > 0 needs a PRNG key — "
+                         "unseeded thermal noise is how the legacy fig4 "
+                         "noise baseline silently ran deterministic")
+    varied = chips is not None
+    if varied and chips.n_spins != J.shape[-1]:
+        raise ValueError(f"chips sampled for N={chips.n_spins} but the "
+                         f"bucket is N={J.shape[-1]} — sample the fleet "
+                         f"at the PADDED size")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = J.shape[-1]
+    if n != dev.n_spins:
+        dev = dataclasses.replace(dev, n_spins=n)
+    out = _fleet_anneal(J, v0, chips, key, dev, pert, params, varied)
+    _dispatches += 1
+    return out

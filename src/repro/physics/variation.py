@@ -1,0 +1,153 @@
+"""Process-variation models for the virtual-chip fleet.
+
+The paper characterizes ONE physical die. This module manufactures as many
+as we like: a :class:`VariationModel` describes a process corner as spreads
+around the nominal :class:`~repro.core.device_model.DeviceModel`, and
+``sample()`` draws a :class:`ChipVariation` — a pytree of per-chip
+parameter arrays the dynamics integrator vmaps over, so a whole fleet of
+imperfect chips anneals in ONE device dispatch.
+
+Four non-idealities, chosen to match what multi-die CMOS Ising papers
+actually measure across corners:
+
+* ``j_mismatch_sigma`` — per-CELL multiplicative coupling mismatch
+  ``J_eff = J * (1 + sigma * z)``. Each J_ij cell is its own
+  current-steering DAC on the die, so the mismatch is drawn per directed
+  cell (NOT symmetrized) — the simulator's directed-J convention
+  (``core.hamiltonian``) integrates the asymmetric matrix exactly.
+* ``tau_leak_spread`` — lognormal spread of the gate-leak time constant:
+  ``tau_chip = tau_nominal * exp(spread * z)``. Median-preserving, always
+  positive.
+* ``refresh_jitter_slots`` — uniform integer refresh-pointer phase offset
+  in ``[-jitter, +jitter]`` column slots (refresh-cadence jitter between
+  the column clock and the anneal clock).
+* ``sigma_gain_spread`` — lognormal spread of the node nonlinearity gain
+  (comparator/inverter gain variation).
+
+Determinism contract (pinned by tests/test_physics.py): every chip's draw
+depends only on ``(seed, chip_index)`` via ``jax.random.fold_in`` — the
+same seed reproduces bit-identical draws in any process, growing the fleet
+never reshuffles existing chips, and no stream is reused across the chip
+axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: fold_in tags separating the four per-chip parameter streams.
+_STREAM_J, _STREAM_TAU, _STREAM_SLOT, _STREAM_GAIN = 1, 2, 3, 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ChipVariation:
+    """Per-chip parameter draws — one pytree, chip axis leading.
+
+    ``j_gain`` multiplies the coupling matrix (per directed cell),
+    ``tau_scale`` multiplies ``DeviceModel.tau_leak_sweeps``,
+    ``slot_offset`` shifts the refresh-pointer phase (column slots), and
+    ``gain_scale`` multiplies the sigma-nonlinearity gain.
+    """
+
+    j_gain: jax.Array        # (C, N, N) float32
+    tau_scale: jax.Array     # (C,)      float32
+    slot_offset: jax.Array   # (C,)      int32
+    gain_scale: jax.Array    # (C,)      float32
+
+    @property
+    def n_chips(self) -> int:
+        return int(self.tau_scale.shape[0])
+
+    @property
+    def n_spins(self) -> int:
+        return int(self.j_gain.shape[-1])
+
+    @classmethod
+    def concat(cls, parts: list["ChipVariation"]) -> "ChipVariation":
+        """Stack fleets along the chip axis — how the robustness benchmark
+        rides every process corner in ONE dispatch."""
+        if not parts:
+            raise ValueError("concat needs at least one ChipVariation")
+        return cls(
+            j_gain=jnp.concatenate([p.j_gain for p in parts], axis=0),
+            tau_scale=jnp.concatenate([p.tau_scale for p in parts], axis=0),
+            slot_offset=jnp.concatenate([p.slot_offset for p in parts],
+                                        axis=0),
+            gain_scale=jnp.concatenate([p.gain_scale for p in parts],
+                                       axis=0))
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationModel:
+    """One process corner: spreads around the nominal device (all zero ->
+    every sampled chip IS the nominal device, exactly)."""
+
+    j_mismatch_sigma: float = 0.0
+    tau_leak_spread: float = 0.0
+    refresh_jitter_slots: int = 0
+    sigma_gain_spread: float = 0.0
+
+    def __post_init__(self):
+        if self.j_mismatch_sigma < 0 or self.tau_leak_spread < 0 or \
+                self.sigma_gain_spread < 0 or self.refresh_jitter_slots < 0:
+            raise ValueError(f"variation spreads must be nonnegative: {self}")
+
+    @property
+    def is_zero(self) -> bool:
+        """True when sampling can only produce the nominal chip."""
+        return (self.j_mismatch_sigma == 0 and self.tau_leak_spread == 0 and
+                self.refresh_jitter_slots == 0 and
+                self.sigma_gain_spread == 0)
+
+    def sample(self, seed: int, n_chips: int, n_spins: int,
+               chip0: int = 0) -> ChipVariation:
+        """Draw ``n_chips`` chips with indices ``chip0..chip0+n_chips-1``.
+
+        Chip ``c``'s draw depends only on ``(seed, c)`` — prefix-stable
+        (sampling 4 chips then 8 reproduces the first 4 bit-identically)
+        and stream-independent across the chip axis.
+        """
+        if n_chips < 1:
+            raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+        base = jax.random.PRNGKey(seed)
+
+        def draw(c):
+            k = jax.random.fold_in(base, c)
+            zj = jax.random.normal(jax.random.fold_in(k, _STREAM_J),
+                                   (n_spins, n_spins), jnp.float32)
+            zt = jax.random.normal(jax.random.fold_in(k, _STREAM_TAU),
+                                   (), jnp.float32)
+            zg = jax.random.normal(jax.random.fold_in(k, _STREAM_GAIN),
+                                   (), jnp.float32)
+            off = jax.random.randint(
+                jax.random.fold_in(k, _STREAM_SLOT), (),
+                -self.refresh_jitter_slots, self.refresh_jitter_slots + 1,
+                jnp.int32)
+            return (1.0 + self.j_mismatch_sigma * zj,
+                    jnp.exp(self.tau_leak_spread * zt),
+                    off,
+                    jnp.exp(self.sigma_gain_spread * zg))
+
+        idx = jnp.arange(chip0, chip0 + n_chips, dtype=jnp.int32)
+        j_gain, tau, off, gain = jax.vmap(draw)(idx)
+        return ChipVariation(j_gain=j_gain, tau_scale=tau, slot_offset=off,
+                             gain_scale=gain)
+
+
+#: the nominal corner — zero spread everywhere.
+NOMINAL_VARIATION = VariationModel()
+
+
+def fingerprint(chips: ChipVariation) -> str:
+    """Stable hex digest of a fleet's draws — what the cross-process
+    determinism test compares."""
+    import hashlib
+    h = hashlib.sha256()
+    for leaf in (chips.j_gain, chips.tau_scale, chips.slot_offset,
+                 chips.gain_scale):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()

@@ -1,0 +1,286 @@
+"""repro.physics — the analog device-dynamics tier: variation-draw
+determinism (in-process, cross-process, prefix stability), per-chip RNG
+stream independence, discrete-limit bitwise parity with the discrete
+engine, one-dispatch-per-bucket accounting, registry integration, and the
+shared ``DeviceModel.has_leakage`` predicate its call sites pin."""
+import dataclasses
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import ProblemSuite, get_solver
+from repro.core.annealer import anneal
+from repro.core.device_model import DeviceModel
+from repro.core.engine import AnnealEngine
+from repro.core.lfsr import lfsr_voltage_inits
+from repro.core.perturbation import (DEFAULT_PERTURBATION, NOMINAL,
+                                     column_scales, unit_scales)
+from repro.physics import (DISCRETE_LIMIT, ChipVariation, PhysicsParams,
+                           VariationModel, dispatch_count, fingerprint,
+                           fleet_anneal, reset_dispatch_count)
+
+SRC_DIR = repro.__path__[0].rsplit("/repro", 1)[0]
+
+#: quick device: 2 Euler substeps per slot keeps every scan here ~100 steps
+DEV = dataclasses.replace(DeviceModel(), substeps=2)
+VARIED = VariationModel(j_mismatch_sigma=0.1, tau_leak_spread=0.2,
+                        refresh_jitter_slots=3, sigma_gain_spread=0.05)
+
+
+def _instance(n=16, seed=0, problems=1):
+    """Quantized level-space couplings + the engine's v0 streams."""
+    suite = ProblemSuite.random(n, 0.5, problems, seed=seed)
+    J = suite.buckets(n)[0].J
+    v0 = np.stack([lfsr_voltage_inits(n, 4, seed=1 + 7919 * p, vdd=DEV.vdd,
+                                      swing=DEV.init_swing)
+                   for p in range(J.shape[0])])
+    return np.asarray(J), v0
+
+
+# -- variation-model determinism ----------------------------------------------
+
+def test_zero_variation_samples_the_nominal_chip_exactly():
+    chips = VariationModel().sample(3, 4, 8)
+    assert np.array_equal(np.asarray(chips.j_gain), np.ones((4, 8, 8)))
+    assert np.array_equal(np.asarray(chips.tau_scale), np.ones(4))
+    assert np.array_equal(np.asarray(chips.slot_offset), np.zeros(4))
+    assert np.array_equal(np.asarray(chips.gain_scale), np.ones(4))
+    assert VariationModel().is_zero and not VARIED.is_zero
+
+
+def test_chip_draws_are_prefix_stable_and_indexable():
+    full = VARIED.sample(5, 8, 12)
+    head = VARIED.sample(5, 4, 12)
+    tail = VARIED.sample(5, 4, 12, chip0=4)
+    # growing the fleet never reshuffles existing chips...
+    assert fingerprint(head) == fingerprint(
+        ChipVariation(j_gain=full.j_gain[:4], tau_scale=full.tau_scale[:4],
+                      slot_offset=full.slot_offset[:4],
+                      gain_scale=full.gain_scale[:4]))
+    # ...and chip index, not array position, owns the stream
+    assert np.array_equal(np.asarray(tail.j_gain),
+                          np.asarray(full.j_gain[4:]))
+    # independent streams: no two chips share a draw
+    jg = np.asarray(full.j_gain)
+    for a in range(8):
+        for b in range(a + 1, 8):
+            assert not np.array_equal(jg[a], jg[b])
+    # different seeds -> different fleets
+    assert fingerprint(full) != fingerprint(VARIED.sample(6, 8, 12))
+
+
+_FP_SCRIPT = """\
+import sys
+sys.path.insert(0, {src!r})
+from repro.physics import VariationModel, fingerprint
+vm = VariationModel(j_mismatch_sigma=0.1, tau_leak_spread=0.2,
+                    refresh_jitter_slots=3, sigma_gain_spread=0.05)
+print(fingerprint(vm.sample(5, 8, 12)))
+"""
+
+_SOLVE_SCRIPT = """\
+import sys
+sys.path.insert(0, {src!r})
+import hashlib
+import numpy as np
+from repro.api import ProblemSuite, get_solver
+from repro.physics import VariationModel
+suite = ProblemSuite.random(12, 0.5, 2, seed=3)
+s = get_solver("ode-jax", n_chips=3,
+               variation=VariationModel(j_mismatch_sigma=0.1))
+rep = s.solve(suite, runs=2, seed=1, block=16)
+e = np.concatenate([np.asarray(x, np.float64) for x in rep.energies])
+print(hashlib.sha256(e.tobytes()).hexdigest())
+"""
+
+
+def _run_script(template: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", template.format(src=SRC_DIR)],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+def test_variation_draws_bit_identical_across_processes():
+    local = fingerprint(VARIED.sample(5, 8, 12))
+    assert _run_script(_FP_SCRIPT) == local
+
+
+def test_solve_report_energies_bit_identical_across_processes():
+    import hashlib
+    suite = ProblemSuite.random(12, 0.5, 2, seed=3)
+    s = get_solver("ode-jax", n_chips=3,
+                   variation=VariationModel(j_mismatch_sigma=0.1))
+    rep = s.solve(suite, runs=2, seed=1, block=16)
+    e = np.concatenate([np.asarray(x, np.float64) for x in rep.energies])
+    local = hashlib.sha256(e.tobytes()).hexdigest()
+    assert _run_script(_SOLVE_SCRIPT) == local
+
+
+# -- per-chip noise streams ---------------------------------------------------
+
+def test_noise_streams_stable_as_fleet_grows():
+    import jax
+    J, v0 = _instance()
+    # two Euler steps: early-trajectory voltages, BEFORE the clipped
+    # dynamics pin every chip to the rails — converged fleets all look
+    # alike at readout, which would hide stream reuse
+    dev = dataclasses.replace(DEV, anneal_sweeps=1.0 / 64)
+    params = PhysicsParams(noise_sigma=0.2)
+    key = jax.random.PRNGKey(11)
+    vm = VariationModel(j_mismatch_sigma=0.05)
+    small = fleet_anneal(J, v0, dev, DEFAULT_PERTURBATION, params=params,
+                         chips=vm.sample(9, 2, 16), key=key)
+    big = fleet_anneal(J, v0, dev, DEFAULT_PERTURBATION, params=params,
+                       chips=vm.sample(9, 5, 16), key=key)
+    # chip c's noise depends only on (key, step, c): adding chips must not
+    # perturb existing trajectories by a single bit...
+    assert np.array_equal(np.asarray(small.v_final),
+                          np.asarray(big.v_final[:2]))
+    assert np.array_equal(np.asarray(small.sigma), np.asarray(big.sigma[:2]))
+    # ...and no stream is reused across the chip axis
+    v = np.asarray(big.v_final)
+    for a in range(5):
+        for b in range(a + 1, 5):
+            assert not np.array_equal(v[a], v[b])
+
+
+def test_noise_without_key_is_rejected():
+    J, v0 = _instance()
+    with pytest.raises(ValueError, match="PRNG key"):
+        fleet_anneal(J, v0, DEV, DEFAULT_PERTURBATION,
+                     params=PhysicsParams(noise_sigma=0.1))
+
+
+def test_fleet_sampled_at_wrong_width_is_rejected():
+    J, v0 = _instance(n=16)
+    with pytest.raises(ValueError, match="PADDED"):
+        fleet_anneal(J, v0, DEV, DEFAULT_PERTURBATION,
+                     chips=VARIED.sample(0, 2, 12))
+
+
+def test_physics_params_validate():
+    with pytest.raises(ValueError, match="integrator"):
+        PhysicsParams(integrator="rk4")
+    with pytest.raises(ValueError, match="gain"):
+        PhysicsParams(gain=0.0)
+    with pytest.raises(ValueError, match="nonnegative"):
+        PhysicsParams(noise_sigma=-1.0)
+    with pytest.raises(ValueError, match="nonnegative"):
+        VariationModel(j_mismatch_sigma=-0.1)
+
+
+# -- discrete-limit parity ----------------------------------------------------
+
+@pytest.mark.parametrize("pert,tau", [
+    (DEFAULT_PERTURBATION, 10.0),      # perturbation + leakage schedule
+    (NOMINAL, 10.0),                   # leakage-only schedule
+    (NOMINAL, float("inf")),           # unit schedule (pure GD)
+])
+def test_discrete_limit_is_bitwise_identical_to_engine(pert, tau):
+    dev = dataclasses.replace(DEV, tau_leak_sweeps=tau)
+    J, v0 = _instance(problems=2)
+    ref = anneal(J, v0, dev, pert)
+    ode = fleet_anneal(J, v0, dev, pert, params=DISCRETE_LIMIT)
+    assert ode.sigma.shape[0] == 1             # trivial fleet: one chip
+    assert np.array_equal(np.asarray(ode.v_final[0]),
+                          np.asarray(ref.v_final))
+    assert np.array_equal(np.asarray(ode.sigma[0]), np.asarray(ref.sigma))
+    assert np.array_equal(np.asarray(ode.energy[0]), np.asarray(ref.energy))
+
+
+def test_soft_physics_departs_from_the_discrete_engine():
+    # the parity test would pass vacuously if DEFAULT_PHYSICS were secretly
+    # the discrete limit — pin that the soft dynamics actually differ
+    # (early trajectory: both settle to the same rails on easy instances)
+    J, v0 = _instance()
+    dev = dataclasses.replace(DEV, anneal_sweeps=1.0 / 64)
+    ref = anneal(J, v0, dev, DEFAULT_PERTURBATION)
+    ode = fleet_anneal(J, v0, dev, DEFAULT_PERTURBATION)
+    assert not np.array_equal(np.asarray(ode.v_final[0]),
+                              np.asarray(ref.v_final))
+
+
+# -- dispatch accounting ------------------------------------------------------
+
+def test_one_dispatch_per_pad_bucket_through_the_registry():
+    suite = ProblemSuite.random(12, 0.5, 2, seed=4) \
+        + ProblemSuite.random(40, 0.5, 1, seed=5)
+    solver = get_solver("ode-jax", n_chips=4,
+                        variation=VariationModel(j_mismatch_sigma=0.1))
+    reset_dispatch_count()
+    rep = solver.solve(suite, runs=2, seed=1)
+    assert dispatch_count() == suite.num_dispatches()
+    assert rep.dispatches == suite.num_dispatches()
+    # chip-major rows: runs * n_chips energies per problem, native-N spins
+    assert rep.runs == 2 * 4
+    assert [np.asarray(e).shape for e in rep.energies] == [(8,)] * 3
+    assert [np.asarray(s).shape for s in rep.best_sigma] == \
+        [(12,), (12,), (40,)]
+    # the reported energies are float64 host recomputes: the best energy
+    # must match an exact recompute from the best spins (integer-exact)
+    for p, e, sg in zip(suite.problems, rep.energies, rep.best_sigma):
+        s64 = np.asarray(sg, np.float64)
+        J64 = np.asarray(p.J_levels, np.float64)
+        assert float(np.min(e)) == -0.5 * s64 @ J64 @ s64
+
+
+# -- the shared leakage predicate (has_leakage call sites) --------------------
+
+def test_has_leakage_pins_all_three_call_sites():
+    leak = dataclasses.replace(DEV, tau_leak_sweeps=10.0)
+    ideal = dataclasses.replace(DEV, tau_leak_sweeps=float("inf"))
+    frozen = dataclasses.replace(DEV, tau_leak_sweeps=0.0)
+    assert leak.has_leakage
+    assert not ideal.has_leakage and not frozen.has_leakage
+
+    # call site 1: the schedule — no leakage means NO decay anywhere
+    t = leak.slots_per_sweep * leak.substeps * 2      # two sweeps in
+    assert np.all(np.asarray(column_scales(t, ideal, NOMINAL)) == 1.0)
+    assert np.all(np.asarray(column_scales(t, frozen, NOMINAL)) == 1.0)
+    assert np.any(np.asarray(column_scales(t, leak, NOMINAL)) < 1.0)
+
+    # call site 2: the integer fast-path gate is exactly
+    # (not pert.enabled) and (not has_leakage)
+    assert unit_scales(ideal, NOMINAL)
+    assert not unit_scales(leak, NOMINAL)
+    assert not unit_scales(ideal, DEFAULT_PERTURBATION)
+
+    # call site 3: the autotune cache key's schedule kind
+    def sched(dev, pert):
+        k = AnnealEngine(device=dev, perturbation=pert)._key(1, 1, 16, "f32")
+        return k.split("sched=")[1]
+    assert sched(ideal, NOMINAL) == "unit"
+    assert sched(leak, NOMINAL) == "leak"
+    assert sched(leak, DEFAULT_PERTURBATION) == "pert"
+
+
+# -- the physics tier as a serve fallback rung --------------------------------
+
+def test_ode_jax_rescues_a_dead_primary_in_the_fallback_chain():
+    import time
+
+    from repro.serve import FlushExecutor, ResiliencePolicy
+    from repro.serve.service import ServeTicket, _Request
+
+    class _Dead:
+        def solve(self, *a, **k):
+            raise RuntimeError("primary down")
+
+    ex = FlushExecutor(
+        ResiliencePolicy(max_retries=0, fallback=("ode-jax",)),
+        primary=lambda: _Dead(), solver_name="dead", runs=2, seed=5,
+        block=16)
+    probs = [ProblemSuite.random(12, 0.5, 1, seed=100 + i).problems[0]
+             for i in range(2)]
+    reqs = [_Request(problem=p, budget=None, deadline_s=None,
+                     submitted=time.monotonic(), ticket=ServeTicket())
+            for p in probs]
+    outcomes, partials, _ = ex.execute(reqs)
+    assert all(o.ok and o.degraded and o.solver == "ode-jax"
+               for o in outcomes)
+    assert ex.fallback_solves == 2
