@@ -11,21 +11,25 @@ encoded zoo workloads (MIS + graph coloring, ``repro.workloads``) so every
 solver is exercised on structured penalty landscapes, not just random
 couplings — the encodings ride the same ``Problem`` surface for free.
 
-Two gates make this a CI check, not just a report:
+Three gates make this a CI check, not just a report:
 
   * every ``device="jax"`` solver must take at most one dispatch per pad
     bucket of its suite — a batched solver quietly regressing to
     per-problem dispatch fails the run;
   * jax solvers run with ``warmup=True``, so ``anneals_per_s`` measures
     steady-state throughput and one-time XLA compilation lands in the
-    separate ``compile_s`` column.
+    separate ``compile_s`` column;
+  * ``sb-jax`` (simulated bifurcation, the state-of-the-art classical
+    competitor on dense Max-Cut) must reach SR >= the engine's
+    perturbation baseline on the dense Max-Cut slice — the frontier row
+    the solver exists to claim (``success_rate_maxcut`` per solver).
 """
 from __future__ import annotations
 
 import time
 
-from repro.api import (ProblemSuite, best_known_energies, get_solver,
-                       list_solvers)
+from repro.api import (Problem, ProblemSuite, best_known_energies,
+                       get_solver, list_solvers)
 
 from .common import csv_line, record, write_root_bench
 
@@ -34,10 +38,18 @@ def run(full: bool = False):
     t0 = time.time()
     sizes = (16, 32, 64) if full else (16, 32)
     per_size, runs = (4, 256) if full else (2, 32)
+    n_cut, per_cut = (48, 4) if full else (24, 3)
     suite = ProblemSuite.grid(sizes=sizes, densities=(0.5,),
                               problems_per_cell=per_size, seed=515)
     suite = suite + ProblemSuite.workload("mis", size=10, seed=515) \
         + ProblemSuite.workload("coloring", size=5, seed=515)
+    # Dense Max-Cut slice: the workload class SB claims state-of-the-art
+    # on. Kept within one 64-spin die so the engine rows cover it too —
+    # the sb-jax >= engine SR gate below reads exactly this slice.
+    maxcut = ProblemSuite([Problem.maxcut(n_cut, density=0.9, seed=606 + i)
+                           for i in range(per_cut)])
+    suite = suite + maxcut
+    maxcut_hashes = frozenset(maxcut.hashes)
     bk = best_known_energies(suite, seed=2)
 
     results = {}
@@ -60,9 +72,14 @@ def run(full: bool = False):
                 f"dispatch-per-bucket hot path regressed")
         rep.attach_oracle(rep.best_energy if caps.exact else sub_bk)
         m = rep.metrics()
+        sr_all = rep.success_rate()
+        cut_idx = [i for i, h in enumerate(sub.hashes)
+                   if h in maxcut_hashes]
+        sr_cut = (float(sr_all[cut_idx].mean()) if cut_idx else None)
         results[name] = {
             "anneals_per_s": float(rep.anneals_per_s),
             "success_rate": float(m["mean_success_rate"]),
+            "success_rate_maxcut": sr_cut,
             "wall_s": float(rep.wall_s),
             "compile_s": float(rep.compile_s),
             "dispatches": int(rep.dispatches),
@@ -72,7 +89,17 @@ def run(full: bool = False):
             "subset_max_n": caps.max_n,
         }
 
+    sb_cut = results["sb-jax"]["success_rate_maxcut"]
+    engine_cut = results["engine"]["success_rate_maxcut"]
+    if sb_cut is None or engine_cut is None or sb_cut < engine_cut:
+        raise RuntimeError(
+            f"sb-jax must match or beat the engine's perturbation baseline "
+            f"on the dense Max-Cut slice: SR {sb_cut} vs engine "
+            f"{engine_cut} — the SB frontier row regressed")
+
     payload = {"sizes": list(sizes), "per_size": per_size, "runs": runs,
+               "maxcut_slice": {"n": n_cut, "density": 0.9,
+                                "problems": per_cut},
                "suite_dispatch_buckets": suite.num_dispatches(),
                "solvers": results,
                "wall_time": time.strftime("%Y-%m-%d %H:%M:%S")}

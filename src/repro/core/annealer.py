@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .binarize import sign_pm1
 from .device_model import DeviceModel
 from .perturbation import PerturbationConfig, column_scales
 from .hamiltonian import ising_energy
@@ -46,7 +47,7 @@ def _step(v, t, J, dev: DeviceModel, pert: PerturbationConfig, noise=None):
     # ADC emits int8 spins: the chip's spin wires are 1-bit, so when the
     # spin axis is sharded the cross-shard exchange moves 4x fewer bytes
     # than f32 (§Perf ising iteration 2). Numerically exact (+-1).
-    q8 = jnp.where(v >= dev.threshold, 1, -1).astype(jnp.int8)   # (P, R, N)
+    q8 = sign_pm1(v, dev.threshold, jnp.int8)                    # (P, R, N)
     q8 = _replicate_spin_axis(q8)
     sq = (q8.astype(jnp.float32) * s).astype(J.dtype)  # column scales fold
     dv = jnp.einsum("pij,prj->pri", J, sq,

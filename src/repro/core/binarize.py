@@ -1,0 +1,35 @@
+"""The one ±1 binarization convention: ``x >= threshold -> +1``.
+
+Every path that turns a continuous state into spins — the engine's 1-bit
+inverter ADC (``DeviceModel.adc`` and the int8 cast inside the scan/fused
+anneal steps), the physics tier's hard-gain limit
+(``physics.dynamics._node_output``), and the simulated-bifurcation
+readout (``solvers.sb_jax``) — must agree on how a state sitting EXACTLY
+on the decision boundary maps to a spin. ``jnp.sign(0)`` returns 0, which
+is not a spin at all; the chip's inverter resolves the boundary to +1
+(``v >= vdd/2`` reads high), and the SB exemplar (SNIPPETS.md Snippet 2)
+patches ``sign(0) -> +1`` by hand for the same reason. Re-deriving the
+comparison inline at each call site is how the conventions drift — a padded
+spin initialized exactly at the boundary would then read +1 on one path
+and -1 on another, and cross-path parity tests (the discrete-limit gate,
+the SB readout property test) would chase phantom bit flips.
+
+The comparison is written ``x >= threshold``, NOT ``(x - threshold) >= 0``:
+the subtraction rounds, and a value one ULP below the threshold could land
+on the wrong side of zero after it — the direct compare keeps the bitwise
+parity contracts between the scan path, the fused kernel, and the ODE
+tier exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sign_pm1(x, threshold: float = 0.0, dtype=jnp.float32):
+    """±1 spins from a continuous state; the boundary maps to +1.
+
+    Works on jax or numpy inputs, inside Pallas kernel bodies (pure jnp
+    ops), and under vmap/scan. ``dtype`` picks the spin storage type:
+    float32 for matvec operands, int8 for the ADC wire format.
+    """
+    return jnp.where(jnp.asarray(x) >= threshold, 1, -1).astype(dtype)

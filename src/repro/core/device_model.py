@@ -105,8 +105,10 @@ class DeviceModel:
         return jnp.clip(lev, -self.max_level, self.max_level)
 
     def adc(self, v):
-        """1-bit inverter ADC, Eq. (5): +-1 at vdd/2 (>= maps to +1)."""
-        return jnp.where(v >= self.threshold, 1.0, -1.0).astype(jnp.float32)
+        """1-bit inverter ADC, Eq. (5): +-1 at vdd/2 (>= maps to +1, the
+        repo-wide ``core.binarize.sign_pm1`` convention)."""
+        from .binarize import sign_pm1
+        return sign_pm1(v, self.threshold)
 
 
 DEFAULT_DEVICE = DeviceModel()

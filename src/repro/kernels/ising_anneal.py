@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.binarize import sign_pm1
 from ..core.device_model import DeviceModel
 from ..core.perturbation import (PerturbationConfig, scales_from_cols,
                                  unit_scales)
@@ -77,7 +78,7 @@ def _anneal_kernel(j_ref, v_ref, out_ref, *, dev: DeviceModel,
         # Unit-schedule fast path: the column scale is identically 1, so the
         # matvec is a pure +-1 x integer-level contraction — exact in int32.
         def step(t, v):
-            q8 = jnp.where(v >= thr, 1, -1).astype(jnp.int8)
+            q8 = sign_pm1(v, thr, jnp.int8)
             acc = jnp.dot(q8, J_t, preferred_element_type=jnp.int32)
             return jnp.clip(v + acc.astype(jnp.float32) * drive_dt, 0.0, vdd)
     else:
@@ -85,7 +86,7 @@ def _anneal_kernel(j_ref, v_ref, out_ref, *, dev: DeviceModel,
         col_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
 
         def step(t, v):
-            q = jnp.where(v >= thr, 1.0, -1.0).astype(jnp.float32)
+            q = sign_pm1(v, thr)
             s = scales_from_cols(t, col_ids, dev, pert) * drive_dt   # (1, N)
             sq = q * s
             if j_dtype == "bfloat16":

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.binarize import sign_pm1
 from ..core.device_model import DeviceModel
 from ..core.hamiltonian import ising_energy
 from ..core.perturbation import PerturbationConfig
@@ -46,5 +47,5 @@ def fused_anneal(J, v0, dev: DeviceModel, pert: PerturbationConfig,
                             dev=dev, pert=pert, j_dtype=j_dtype,
                             interpret=interpret, **kw)
     Jf = jnp.asarray(J, jnp.float32)
-    sigma = jnp.where(v >= dev.threshold, 1.0, -1.0)
+    sigma = sign_pm1(v, dev.threshold)
     return v, sigma, ising_energy(Jf, sigma)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core.binarize import sign_pm1
+
 
 def fused_anneal_ref(J, v0, scales, drive_dt: float, vdd: float = 1.0):
     """Integrate the chip dynamics for scales.shape[0] Euler steps.
@@ -31,7 +33,7 @@ def fused_anneal_ref(J, v0, scales, drive_dt: float, vdd: float = 1.0):
     thr = 0.5 * vdd
 
     def body(v, s):
-        q = jnp.where(v >= thr, 1.0, -1.0).astype(jnp.float32)
+        q = sign_pm1(v, thr)
         sq = q * s                                     # (P, R, N) * (N,)
         dv = jnp.einsum("pij,prj->pri", J, sq,
                         preferred_element_type=jnp.float32)

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.binarize import sign_pm1
 from ..core.device_model import DeviceModel
 from ..core.hamiltonian import ising_energy
 from ..core.perturbation import (PerturbationConfig, column_scales,
@@ -150,9 +151,10 @@ def _column_schedule(t, dev: DeviceModel, pert: PerturbationConfig,
 def _node_output(v, dev: DeviceModel, params: PhysicsParams, gain_scale):
     """sig_g(v): the node nonlinearity each neighbor sees, (C, P, R, N)."""
     if params.hard_adc:
-        # the discrete engine's exact ADC ops (int8 then f32)
-        q8 = jnp.where(v >= dev.threshold, 1, -1).astype(jnp.int8)
-        return q8.astype(jnp.float32)
+        # the discrete engine's exact ADC ops (int8 then f32) — the shared
+        # sign_pm1 convention, so the hard-gain limit binarizes boundary
+        # states exactly like the engine and the SB readout
+        return sign_pm1(v, dev.threshold, jnp.int8).astype(jnp.float32)
     u = (v - dev.threshold) / dev.threshold
     g = params.gain if gain_scale is None else params.gain * gain_scale
     return jnp.tanh(g * u)

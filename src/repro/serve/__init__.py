@@ -23,10 +23,12 @@ from .faults import (FAULT_KINDS, FaultInjector, FaultPlan, FaultySolver,
 from .resilience import (CircuitBreaker, FlushExecutor, FlushFailed,
                          FlushTimeout, Overloaded, RequestCancelled,
                          ResiliencePolicy, SolverCrash, validate_row)
-from .service import IsingService, ServeResult, ServeTicket
+from .service import (DEFAULT_FALLBACK_CHAIN, IsingService, ServeResult,
+                      ServeTicket, solver_for_deadline)
 
 __all__ = [
     "IsingService", "ServeResult", "ServeTicket",
+    "DEFAULT_FALLBACK_CHAIN", "solver_for_deadline",
     "ResiliencePolicy", "Overloaded", "RequestCancelled", "SolverCrash",
     "FlushTimeout", "FlushFailed", "CircuitBreaker", "FlushExecutor",
     "validate_row",

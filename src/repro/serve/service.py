@@ -180,6 +180,40 @@ def _budget_tier(budget: Optional[float]) -> Optional[int]:
     return int(round(math.log2(budget)))
 
 
+#: The serve tier's degrade ladder: every rung is a registered solver that
+#: rides the same pad buckets. Device tiers first — sb-jax (simulated
+#: bifurcation, one fused dispatch per bucket) then tabu-jax (the
+#: near-exact searcher) — with the host SA loop last: it makes ZERO device
+#: dispatches, so a service that has degraded all the way down still
+#: answers without touching the accelerator the breaker just gave up on.
+DEFAULT_FALLBACK_CHAIN = ("sb-jax", "tabu-jax", "sa-numpy")
+
+
+def solver_for_deadline(deadline_s: Optional[float],
+                        reference_s: float = 1.0) -> str:
+    """Deadline -> solver tier, for ``IsingService(solver="auto")``.
+
+    * ``None`` (no deadline): the paper's ``engine`` — the nominal tier
+      every benchmark characterizes.
+    * tight (``< reference_s``): ``sb-jax`` — simulated bifurcation
+      converges in a few hundred fused-kernel steps at SR at or above the
+      engine on dense instances, the best answer one fast dispatch buys.
+    * loose (``>= 4 * reference_s``): ``tabu-jax`` — the slack is best
+      spent on the near-exact search tier.
+    * in between: ``engine``.
+
+    The same ``reference_s`` scale feeds ``deadline_to_budget``, so the
+    solver choice and the effort budget move together.
+    """
+    if deadline_s is None:
+        return "engine"
+    if deadline_s < reference_s:
+        return "sb-jax"
+    if deadline_s >= 4.0 * reference_s:
+        return "tabu-jax"
+    return "engine"
+
+
 class IsingService:
     """Continuous-batching solve service over one registered solver.
 
@@ -194,6 +228,12 @@ class IsingService:
     layer (default: validation + retry on, everything else off — the
     fault-free path is bit-identical to an unsupervised service).
     ``fault_plan`` arms deterministic fault injection for chaos runs.
+
+    ``solver="auto"`` picks the tier from the service's target deadline
+    via :func:`solver_for_deadline`: ``auto_deadline_s`` (sharing
+    ``deadline_reference_s`` as its scale) names the latency the service
+    is being provisioned for — tight deadlines resolve to ``sb-jax``,
+    loose ones to ``tabu-jax``, none to the paper's ``engine``.
     """
 
     def __init__(self, solver: str = "engine", runs: int = 64,
@@ -201,12 +241,16 @@ class IsingService:
                  max_batch: int = 64, max_wait_s: float = 0.02,
                  cache: bool = True, cache_path: Optional[str] = None,
                  deadline_reference_s: float = 1.0,
+                 auto_deadline_s: Optional[float] = None,
                  resilience: Optional[ResiliencePolicy] = None,
                  fault_plan: Optional[FaultPlan] = None, **solver_opts):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        if solver == "auto":
+            solver = solver_for_deadline(auto_deadline_s,
+                                         reference_s=deadline_reference_s)
         self.solver_name = solver
         self.runs = int(runs)
         self.seed = int(seed)

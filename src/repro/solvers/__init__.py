@@ -5,9 +5,12 @@ from .sa import simulated_annealing
 from .sa_jax import (metropolis_sweep, simulated_annealing_jax,
                      simulated_annealing_jax_runs)
 from .pt_jax import beta_ladder, parallel_tempering_jax_runs
+from .sb_jax import (simulated_bifurcation_jax,
+                     simulated_bifurcation_jax_runs)
 
 __all__ = ["BRUTE_FORCE_MAX_N", "brute_force_ground_state", "tabu_search",
            "best_known", "tabu_search_jax", "tabu_search_jax_runs",
            "simulated_annealing", "metropolis_sweep",
            "simulated_annealing_jax", "simulated_annealing_jax_runs",
-           "beta_ladder", "parallel_tempering_jax_runs"]
+           "beta_ladder", "parallel_tempering_jax_runs",
+           "simulated_bifurcation_jax", "simulated_bifurcation_jax_runs"]

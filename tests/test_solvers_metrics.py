@@ -44,6 +44,44 @@ def test_success_rate_thresholding():
     assert np.isclose(sr[0], 3 / 5)   # -100, -99.5, -99 pass
 
 
+def test_success_rate_zero_optimum_scale_aware():
+    """Regression: when best_known == 0 the relative-gap term vanishes, and
+    the old fixed 1e-9 fudge judged success from float noise. The tolerance
+    now scales with the energies being judged: float-noise hits count,
+    the 0.5-grid first excited state never does."""
+    best = np.array([0.0])
+    energies = np.array([[0.0, 1e-6, 0.5, 12.0]])
+    sr = success_rate(energies, best, frac=0.99)
+    assert np.isclose(sr[0], 2 / 4)     # 0.0 and the 1e-6 float-noise hit
+    # explicit scale: same verdicts at a coarser declared scale — still
+    # orders of magnitude below the level grid
+    sr = success_rate(energies, best, frac=0.99, scale=np.array([1000.0]))
+    assert np.isclose(sr[0], 2 / 4)
+    # a genuinely suboptimal state is never forgiven, even at huge scale
+    assert success_rate(np.array([[0.5]]), best,
+                        scale=np.array([1e6]))[0] == 0.0
+
+
+def test_success_rate_scale_never_forgives_real_gaps():
+    """The scale-aware fudge stays far below the paper's 1% band for
+    nonzero optima — the original thresholding behavior is unchanged."""
+    best = np.array([-100.0])
+    energies = np.array([[-100.0, -99.5, -99.0, -98.9, -50.0]])
+    assert np.isclose(success_rate(energies, best, frac=0.99)[0], 3 / 5)
+
+
+def test_tts_edge_cases():
+    tau = 3e-6
+    p = np.array([0.0, 1e-9, 0.5, 0.99, 0.999, 1.0])
+    tts = time_to_solution(p, tau, target=0.99)
+    assert tts[0] == np.inf                      # p = 0: unsolvable
+    assert np.all(np.isfinite(tts[1:]))          # p = 1: log1p clamp holds
+    assert not np.any(np.isnan(tts))
+    assert np.all(np.diff(tts) <= 0)             # monotone in p_suc
+    # p >= target: exactly one anneal, never less
+    assert tts[3] == tau and tts[4] == tau and tts[5] == tau
+
+
 def test_tts_formula():
     tau = 3e-6
     # p = 0.5 -> ln(0.01)/ln(0.5) = 6.64 runs

@@ -105,11 +105,18 @@ def test_roundtrip_through_every_capable_solver(name):
     wl = get_workload(name)
     p = wl.random_problem(SIZES[name], seed=2)
     suite = ProblemSuite([p])
+    # per-solver workload tuning: penalty encodings concentrate sigma_J in
+    # a few constraint rows, and bSB's default symplectic step (dt=0.5,
+    # tuned for dense unconstrained couplings) can stall against that
+    # stiffness — the smaller step is the documented setting for encoded
+    # workloads (all five families feasible at these sizes)
+    tuned = {"sb-jax": dict(dt=0.25)}
     solved = []
     for sname, caps in list_solvers().items():
         if caps.max_n is not None and p.n > caps.max_n:
             continue
-        rep = get_solver(sname).solve(suite, runs=48, seed=5, block=32)
+        rep = get_solver(sname, **tuned.get(sname, {})).solve(
+            suite, runs=48, seed=5, block=32)
         # the affine identity holds for whatever the solver returned ...
         mv = wl.model_value(p, spins_to_bits(rep.best_sigma[0]))
         assert mv == model_energy(p, rep.best_sigma[0]), sname
