@@ -16,8 +16,8 @@ import traceback
 
 from . import (device_robustness, fig4_success, fig4_trajectories,
                fig5_sr_density, fig5_tts, kernel_throughput, roofline_bench,
-               serve_chaos, serve_throughput, solver_matrix, table2_ets,
-               workloads)
+               serve_chaos, serve_fleet, serve_throughput, solver_matrix,
+               table2_ets, workloads)
 
 ALL = {
     "fig4_trajectories": fig4_trajectories.run,
@@ -30,6 +30,7 @@ ALL = {
     "solver_matrix": solver_matrix.run,
     "serve_throughput": serve_throughput.run,
     "serve_chaos": serve_chaos.run,
+    "serve_fleet": serve_fleet.run,
     "device_robustness": device_robustness.run,
     "workloads": workloads.run,
 }

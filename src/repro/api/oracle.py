@@ -4,9 +4,10 @@ The tabu oracle used to dominate benchmark wall time (a serial numpy
 loop, one dispatch per problem), and every figure script recomputed it for
 the same instances. Two layers fix that:
 
-  * this cache persists level-space best-known energies to
-    ``experiments/oracle_cache.json`` so repeated benchmark invocations
-    skip the search entirely;
+  * this cache persists level-space best-known energies under
+    ``experiments/oracle_cache.shards/`` (16 content-hash-prefix shards;
+    a legacy monolithic ``oracle_cache.json`` migrates transparently) so
+    repeated benchmark invocations skip the search entirely;
   * cache MISSES above the exact tier are refreshed by the on-device
     ``tabu-jax`` solver — all missing problems are padded into suite
     buckets and solved as ONE batched device dispatch per bucket
@@ -28,7 +29,7 @@ import time
 import numpy as np
 
 from ..solvers.brute_force import BRUTE_FORCE_MAX_N
-from ..utils import load_json_cache, store_json_cache
+from ..utils import load_sharded_json_cache, store_sharded_json_cache
 from .batching import plan_buckets
 from .problem import Problem
 from .suite import ProblemSuite
@@ -48,10 +49,13 @@ def cache_path() -> str:
     return os.environ.get(_CACHE_ENV, DEFAULT_CACHE)
 
 
-# shared atomic best-effort JSON cache (same helper as the engine's
-# autotune cache); stores are merge-on-store, so parallel workers
-# refreshing disjoint problems union their entries instead of clobbering
-_load = load_json_cache
+# shared atomic best-effort JSON cache machinery, in its 16-way sharded
+# layout: entries live under ``experiments/oracle_cache.shards/`` keyed by
+# content-hash prefix, so N fleet workers refreshing disjoint problems
+# flock per shard instead of contending on one inode (a monolithic
+# ``oracle_cache.json`` from an older checkout is migrated transparently
+# on first load). Stores stay merge-on-store per shard.
+_load = load_sharded_json_cache
 
 
 def _keep_best(old: dict, new: dict) -> dict:
@@ -67,7 +71,7 @@ def _keep_best(old: dict, new: dict) -> dict:
 
 
 def _store(path: str, cache: dict) -> None:
-    store_json_cache(path, cache, resolve=_keep_best)
+    store_sharded_json_cache(path, cache, resolve=_keep_best)
 
 
 def _compute(problem: Problem) -> dict:
@@ -109,7 +113,9 @@ def best_known_energies(problems, use_cache: bool = True,
         problems = problems.problems
     path = path or cache_path()
     cache = _load(path) if use_cache else {}
-    dirty = False
+    fresh: dict = {}     # only what this call computed — the store routes
+    #                      just these to their shards, untouched shards
+    #                      are never rewritten
     out = np.empty(len(problems), dtype=np.float64)
     large: list[int] = []
     for i, p in enumerate(problems):
@@ -126,8 +132,7 @@ def best_known_energies(problems, use_cache: bool = True,
                 large.append(i)                  # batched below
                 continue
             entry = _compute(p)
-            cache[key] = entry
-            dirty = True
+            cache[key] = fresh[key] = entry
         out[i] = entry["energy"]
 
     if large:
@@ -142,16 +147,15 @@ def best_known_energies(problems, use_cache: bool = True,
             for k, sub_i in enumerate(bucket.indices):
                 i = large[sub_i]
                 p = problems[i]
-                cache[p.content_hash] = {
+                cache[p.content_hash] = fresh[p.content_hash] = {
                     "energy": float(e_best[k]), "method": "tabu-jax",
                     "n": p.n, "kind": p.kind,
                     "restarts": TABU_JAX_ORACLE_RESTARTS,
                     "computed_at": stamp}
                 out[i] = e_best[k]
-                dirty = True
 
-    if use_cache and dirty:
-        _store(path, cache)
+    if use_cache and fresh:
+        _store(path, fresh)
     return out
 
 
@@ -174,7 +178,7 @@ def reconcile_best_known(problems, candidates, use_cache: bool = True,
     path = path or cache_path()
     cache = _load(path) if use_cache else {}
     out = np.asarray(candidates, dtype=np.float64).copy()
-    dirty = False
+    fresh: dict = {}
     for i, p in enumerate(problems):
         key = p.content_hash
         entry = cache.get(key)
@@ -183,10 +187,10 @@ def reconcile_best_known(problems, candidates, use_cache: bool = True,
             out[i] = cached_e
         elif (cached_e is None and write_missing) or \
                 (cached_e is not None and out[i] < cached_e - 1e-9):
-            cache[key] = {"energy": float(out[i]), "method": method,
-                          "n": p.n, "kind": p.kind,
-                          "computed_at": time.strftime("%Y-%m-%d %H:%M:%S")}
-            dirty = True
-    if use_cache and dirty:
-        _store(path, cache)
+            cache[key] = fresh[key] = {
+                "energy": float(out[i]), "method": method,
+                "n": p.n, "kind": p.kind,
+                "computed_at": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if use_cache and fresh:
+        _store(path, fresh)
     return out

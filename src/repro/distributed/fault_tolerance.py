@@ -22,6 +22,28 @@ import numpy as np
 
 log = logging.getLogger("repro.ft")
 
+# The retryable exception set for resilient_step. Only genuine runtime /
+# device failures are worth a restore-and-replay cycle: StepFailure (the
+# wrapper's own verdicts, e.g. NaN loss) and the XLA runtime error types.
+# Catching bare RuntimeError here swallowed programming bugs — jax raises
+# plain RuntimeError for tracer misuse and API errors, and burning the
+# whole retry budget on a deterministic bug both hides it and quadruples
+# its cost. Both spellings are collected (jax.errors.JaxRuntimeError is
+# the public alias of jaxlib's XlaRuntimeError; on some versions they are
+# distinct classes) with guarded imports so a CPU-only or trimmed install
+# still works.
+_xla_errors: list = []
+try:                                     # public alias (jax >= 0.4.14)
+    from jax.errors import JaxRuntimeError as _JaxRuntimeError
+    _xla_errors.append(_JaxRuntimeError)
+except ImportError:
+    pass
+try:                                     # the underlying jaxlib type
+    from jaxlib.xla_extension import XlaRuntimeError as _XlaRuntimeError
+    _xla_errors.append(_XlaRuntimeError)
+except ImportError:
+    pass
+
 
 @dataclasses.dataclass
 class StragglerDetector:
@@ -74,6 +96,9 @@ class StepFailure(RuntimeError):
     pass
 
 
+RETRYABLE_ERRORS: tuple = (StepFailure, *_xla_errors)
+
+
 def resilient_step(step_fn: Callable, restore_fn: Callable,
                    max_retries: int = 3, nan_guard: bool = True):
     """Wrap a train step with restore-and-retry semantics.
@@ -90,7 +115,10 @@ def resilient_step(step_fn: Callable, restore_fn: Callable,
                 if nan_guard and not np.isfinite(float(metrics.get("loss", 0.0))):
                     raise StepFailure("non-finite loss")
                 return new_state, metrics
-            except (StepFailure, RuntimeError) as e:  # XlaRuntimeError subclasses RuntimeError
+            except RETRYABLE_ERRORS as e:
+                # StepFailure + XLA runtime errors only. A bare
+                # RuntimeError (tracer misuse, API bugs) propagates
+                # immediately — retrying a deterministic bug hides it.
                 last_err = e
                 log.warning("step failed (attempt %d/%d): %s",
                             attempt + 1, max_retries, e)

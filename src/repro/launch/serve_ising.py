@@ -24,7 +24,8 @@ import threading
 import time
 
 from ..api import Problem
-from ..serve import FaultPlan, IsingService, ResiliencePolicy
+from ..serve import (DEFAULT_QOS, FaultPlan, IsingFleet, IsingService,
+                     QOS_CLASSES, ResiliencePolicy)
 
 
 def build_pool(sizes, density: float, pool: int, seed: int) -> list[Problem]:
@@ -33,9 +34,21 @@ def build_pool(sizes, density: float, pool: int, seed: int) -> list[Problem]:
             for i in range(pool)]
 
 
-def run_load(svc: IsingService, pool, clients: int, duration_s: float,
-             deadline_s=None, seed: int = 0, live: bool = True) -> dict:
-    """Closed-loop load generator; returns the final service stats."""
+def _live_view(stats: dict) -> dict:
+    """Normalize service/fleet ``stats()`` to the live-line fields (the
+    fleet nests its aggregate under ``"fleet"`` and has no mean_batch)."""
+    if "fleet" not in stats:
+        return stats
+    f = dict(stats["fleet"])
+    f["mean_batch"] = (f["completed"] / f["flushes"]) if f["flushes"] else 0.0
+    return f
+
+
+def run_load(svc, pool, clients: int, duration_s: float,
+             deadline_s=None, seed: int = 0, live: bool = True,
+             qos: str = DEFAULT_QOS) -> dict:
+    """Closed-loop load generator against an ``IsingService`` or an
+    ``IsingFleet``; returns the final (raw) stats."""
     stop = threading.Event()
     errors = []
 
@@ -44,7 +57,8 @@ def run_load(svc: IsingService, pool, clients: int, duration_s: float,
         while not stop.is_set():
             p = rng.choice(pool)
             try:
-                svc.submit(p, deadline_s=deadline_s).result(timeout=300)
+                svc.submit(p, deadline_s=deadline_s,
+                           qos=qos).result(timeout=300)
             except Exception as e:        # noqa: BLE001 — surface at exit
                 errors.append(e)
                 return
@@ -59,7 +73,7 @@ def run_load(svc: IsingService, pool, clients: int, duration_s: float,
         time.sleep(max(0.0, next_tick - time.monotonic()))
         next_tick += 1.0
         if live:
-            s = svc.stats()
+            s = _live_view(svc.stats())
             print(f"[{time.monotonic() - t0:5.1f}s] "
                   f"{s['problems_per_s']:7.1f} problems/s  "
                   f"p50 {s['p50_latency_s'] * 1e3:7.1f} ms  "
@@ -75,10 +89,43 @@ def run_load(svc: IsingService, pool, clients: int, duration_s: float,
     return svc.stats()
 
 
+def _print_resilience(label: str, r: dict) -> None:
+    print(f"-- {label}: retries {r['retries']}, "
+          f"bisections {r['bisections']}, hedges {r['hedges']}, "
+          f"validation rejects {r['validation_failures']}, "
+          f"breaker trips {r['breaker_trips']}, "
+          f"fallback solves {r['fallback_solves']}")
+
+
+def _print_fleet_ledger(stats: dict) -> None:
+    """Per-worker + fleet-aggregate resilience/ownership ledger."""
+    f, led = stats["fleet"], stats["fleet"]["ledger"]
+    print(f"-- fleet: {f['workers_live']} live / {f['workers_dead']} dead "
+          f"({f['worker_crashes']} crashes), "
+          f"leases reclaimed {led['reclaimed']} "
+          f"{led['reclaims_by_reason'] or ''}, "
+          f"stale resolves {led['stale_resolves']}, lost {f['lost']}, "
+          f"shed {f['shed']} {f['shed_by_qos'] or ''}")
+    for wid in sorted(stats["workers"]):
+        w = stats["workers"][wid]
+        _print_resilience(
+            f"  {wid}: {w['flushes']} flushes/{w['dispatches']} dispatches"
+            f" | resilience", w["resilience"])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--solver", default="sa-jax",
                     help="registered solver backing the service")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker count; >1 serves through the "
+                         "crash-tolerant IsingFleet (rendezvous-routed "
+                         "batch keys, work-ownership ledger, reaper)")
+    ap.add_argument("--qos", default=DEFAULT_QOS,
+                    choices=sorted(QOS_CLASSES),
+                    help="QoS class for every generated request — under "
+                         "overload, low-priority classes degrade and "
+                         "shed first")
     ap.add_argument("--sizes", default="16,32,64",
                     help="comma-separated spin counts in the problem mix")
     ap.add_argument("--density", type=float, default=0.5)
@@ -127,31 +174,46 @@ def main():
         resilience = ResiliencePolicy(
             fallback=fallback, flush_timeout_s=1.0, min_timeout_s=0.5,
             breaker_cooldown_s=2.0)
-        fault_plan = FaultPlan.from_rates(seed=args.chaos_seed,
-                                          rate=args.chaos)
+        # a fleet's chaos sites are worker-namespaced (process kills,
+        # lease expiries, router drops); a single service draws at the
+        # solve/cache sites
+        fault_plan = (FaultPlan.for_fleet(seed=args.chaos_seed,
+                                          rate=args.chaos,
+                                          n_workers=args.workers)
+                      if args.workers > 1 else
+                      FaultPlan.from_rates(seed=args.chaos_seed,
+                                           rate=args.chaos))
 
-    with IsingService(solver=args.solver, runs=args.runs, seed=args.seed,
-                      max_batch=args.max_batch,
-                      max_wait_s=args.max_wait_ms / 1e3,
-                      cache=not args.no_cache,
-                      resilience=resilience, fault_plan=fault_plan) as svc:
-        stats = run_load(svc, pool, args.clients, args.duration,
-                         deadline_s=deadline_s, seed=args.seed + 1)
-        rep = svc.report()
+    common = dict(solver=args.solver, runs=args.runs, seed=args.seed,
+                  max_batch=args.max_batch,
+                  max_wait_s=args.max_wait_ms / 1e3,
+                  cache=not args.no_cache,
+                  resilience=resilience, fault_plan=fault_plan)
+    rep = raw = None
+    if args.workers > 1:
+        with IsingFleet(workers=args.workers, **common) as fleet:
+            raw = run_load(fleet, pool, args.clients, args.duration,
+                           deadline_s=deadline_s, seed=args.seed + 1,
+                           qos=args.qos)
+    else:
+        with IsingService(**common) as svc:
+            raw = run_load(svc, pool, args.clients, args.duration,
+                           deadline_s=deadline_s, seed=args.seed + 1,
+                           qos=args.qos)
+            rep = svc.report()
+    stats = _live_view(raw)
     print(f"\n-- final: {stats['completed']} solved "
           f"({stats['problems_per_s']:.1f}/s sustained), "
           f"p50 {stats['p50_latency_s'] * 1e3:.1f} ms / "
           f"p95 {stats['p95_latency_s'] * 1e3:.1f} ms, "
           f"cache hit {stats['cache_hit_rate']:.1%}, "
           f"{stats['flushes']} flushes -> {stats['dispatches']} dispatches")
+    if args.workers > 1:
+        _print_fleet_ledger(raw)
+    else:
+        _print_resilience("resilience", raw["resilience"])
     if args.chaos is not None:
-        r, f = stats["resilience"], stats["faults"]
-        print(f"-- chaos: injected {f['injected']} | "
-              f"retries {r['retries']}, bisections {r['bisections']}, "
-              f"hedges {r['hedges']}, "
-              f"validation rejects {r['validation_failures']}, "
-              f"breaker trips {r['breaker_trips']}, "
-              f"fallback solves {r['fallback_solves']}")
+        print(f"-- chaos: injected {stats['faults']['injected']}")
     if rep is not None:
         print(rep.summary())
 

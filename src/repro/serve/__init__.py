@@ -17,21 +17,35 @@ retry, bisection failure isolation, circuit breaker + fallback chain,
 watchdog/hedging, and float64 result validation — with a deterministic
 chaos harness (``serve.faults``) to prove it. See SERVE.md for the
 architecture, admission policies, and the failure model.
+
+Scale-out: :class:`~repro.serve.fleet.IsingFleet` runs N such workers
+behind a rendezvous-hashing router with a crash-tolerant work-ownership
+ledger (per-flush epoch leases, reaper-driven reclaim — a worker dying
+mid-flush loses zero tickets) and sharded shared result stores; QoS
+classes (``serve.qos``) layer priorities on the deadline→budget mapping
+so overload sheds low-priority work first.
 """
-from .faults import (FAULT_KINDS, FaultInjector, FaultPlan, FaultySolver,
-                     InjectedFault, InjectedWorkerCrash)
+from .faults import (FAULT_KINDS, FLEET_FAULT_KINDS, FaultInjector,
+                     FaultPlan, FaultySolver, InjectedFault,
+                     InjectedWorkerCrash)
+from .fleet import FleetWorker, IsingFleet, WorkerKilled, WorkLedger
+from .qos import DEFAULT_QOS, QOS_CLASSES, QoSClass, resolve_qos
 from .resilience import (CircuitBreaker, FlushExecutor, FlushFailed,
                          FlushTimeout, Overloaded, RequestCancelled,
                          ResiliencePolicy, SolverCrash, validate_row)
 from .service import (DEFAULT_FALLBACK_CHAIN, IsingService, ServeResult,
-                      ServeTicket, solver_for_deadline)
+                      ServeTicket, batch_key, budget_tier,
+                      solver_for_deadline)
 
 __all__ = [
     "IsingService", "ServeResult", "ServeTicket",
     "DEFAULT_FALLBACK_CHAIN", "solver_for_deadline",
+    "batch_key", "budget_tier",
+    "IsingFleet", "FleetWorker", "WorkLedger", "WorkerKilled",
+    "QoSClass", "QOS_CLASSES", "DEFAULT_QOS", "resolve_qos",
     "ResiliencePolicy", "Overloaded", "RequestCancelled", "SolverCrash",
     "FlushTimeout", "FlushFailed", "CircuitBreaker", "FlushExecutor",
     "validate_row",
     "FaultPlan", "FaultInjector", "FaultySolver", "FAULT_KINDS",
-    "InjectedFault", "InjectedWorkerCrash",
+    "FLEET_FAULT_KINDS", "InjectedFault", "InjectedWorkerCrash",
 ]

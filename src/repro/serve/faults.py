@@ -44,6 +44,18 @@ _SOLVE_KINDS = ("flush_error", "straggler_delay", "nan_energy",
                 "worker_crash")
 FAULT_SITES = ("solve", "cache")
 
+# Fleet-level kinds fire at worker-namespaced sites ("worker:<id>", drawn
+# once per flush a worker dispatches) and the router site ("router", drawn
+# once per ticket registration). At a worker site, ``worker_crash`` now
+# means the PROCESS: the worker dies mid-flush without releasing its
+# leases, and a survivor must reclaim them. ``lease_expiry`` forces that
+# flush's lease to expire immediately (the reaper reclaims it while the
+# original worker is still solving — its late resolve must be discarded
+# as stale). ``router_drop`` loses a ticket between ledger registration
+# and worker enqueue (the reaper finds the orphaned lease and re-routes).
+FLEET_FAULT_KINDS = ("worker_crash", "lease_expiry", "router_drop")
+_WORKER_KINDS = ("worker_crash", "lease_expiry")
+
 
 class InjectedFault(RuntimeError):
     """A scheduled ``flush_error`` — transient, retryable."""
@@ -90,6 +102,40 @@ class FaultPlan:
             for idx in range(horizon):
                 # draw unconditionally so each site's stream is independent
                 # of which kinds are enabled at the other site
+                u, pick = rng.random(), rng.random()
+                if site_kinds and u < rate:
+                    schedule[(site, idx)] = site_kinds[
+                        int(pick * len(site_kinds)) % len(site_kinds)]
+        return cls(seed=seed, schedule=MappingProxyType(schedule),
+                   straggler_delay_s=straggler_delay_s)
+
+    @classmethod
+    def for_fleet(cls, seed: int = 0, rate: float = 0.05,
+                  n_workers: int = 4, horizon: int = 1_000,
+                  kinds=FLEET_FAULT_KINDS,
+                  straggler_delay_s: float = 0.6) -> "FaultPlan":
+        """Precompute a fleet-level schedule over worker-namespaced sites.
+
+        Each worker site ``worker:<i>`` draws per flush it dispatches;
+        the ``router`` site draws per ticket registration. Same replay
+        contract as :meth:`from_rates`: the schedule is a pure function
+        of the seed, so a chaos run that kills worker 2 on its 3rd flush
+        kills worker 2 on its 3rd flush every time.
+        """
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        unknown = set(kinds) - set(FLEET_FAULT_KINDS)
+        if unknown:
+            raise ValueError(f"unknown fleet fault kinds: {sorted(unknown)}")
+        worker_kinds = [k for k in kinds if k in _WORKER_KINDS]
+        router_kinds = [k for k in kinds if k == "router_drop"]
+        rng = random.Random(seed)
+        schedule: dict = {}
+        # site names match IsingFleet's worker ids ("w0", "w1", ...)
+        sites = [(f"worker:w{i}", worker_kinds) for i in range(n_workers)]
+        sites.append(("router", router_kinds))
+        for site, site_kinds in sites:
+            for idx in range(horizon):
                 u, pick = rng.random(), rng.random()
                 if site_kinds and u < rate:
                     schedule[(site, idx)] = site_kinds[

@@ -66,8 +66,10 @@ from ..api.problem import Problem
 from ..api.registry import get_solver
 from ..api.report import SolveReport
 from ..api.suite import ProblemSuite
-from ..utils import load_json_cache, store_json_cache
+from ..utils import (load_json_cache, load_sharded_json_cache,
+                     store_json_cache, store_sharded_json_cache)
 from .faults import FaultInjector, FaultPlan, FaultySolver, corrupt_cache_entry
+from .qos import DEFAULT_QOS, QoSClass, resolve_qos
 from .resilience import (FlushExecutor, Overloaded, RequestCancelled,
                          ResiliencePolicy, validate_row)
 
@@ -170,14 +172,44 @@ class _Request:
     ticket: ServeTicket
     key: tuple = ()               # coalescing-group key (set at enqueue)
     cancelled: bool = False
+    qos: str = DEFAULT_QOS
 
 
-def _budget_tier(budget: Optional[float]) -> Optional[int]:
+def budget_tier(budget: Optional[float]) -> Optional[int]:
     """Power-of-two coalescing tier: requests whose effort multipliers are
     within 2x batch together (the flush runs at the tier minimum)."""
     if budget is None:
         return None
     return int(round(math.log2(budget)))
+
+
+# internal alias kept for existing callers/tests
+_budget_tier = budget_tier
+
+
+def batch_key(problem: Problem, budget: Optional[float],
+              block: int = CHIP_BLOCK) -> tuple:
+    """The coalescing-group key — (padded size, budget tier). The fleet
+    router routes on THIS key, so requests that would batch together in a
+    single service land on the same worker and still batch together."""
+    return (padded_size(problem.n, block), budget_tier(budget))
+
+
+def config_digest(solver_opts: dict, block: int) -> str:
+    """Solver-configuration digest for the result-cache key: differently
+    configured services sharing a persistent cache must never serve each
+    other's results as equivalent (n_sweeps=20 vs 2000 is not the same
+    answer)."""
+    cfg = repr((sorted(solver_opts.items()), block))
+    return hashlib.sha1(cfg.encode()).hexdigest()[:12]
+
+
+def result_cache_key(solver_name: str, runs: int, seed: int,
+                     cfg_digest: str, problem: Problem) -> str:
+    """The result-cache key shape shared by :class:`IsingService` and the
+    fleet's shared store. Ends in the content hash, which is also what
+    the 16-way store sharding keys on (`utils.shard_of`)."""
+    return f"{solver_name}:{runs}:{seed}:{cfg_digest}:{problem.content_hash}"
 
 
 #: The serve tier's degrade ladder: every rung is a registered solver that
@@ -240,6 +272,7 @@ class IsingService:
                  seed: int = 0, block: int = CHIP_BLOCK,
                  max_batch: int = 64, max_wait_s: float = 0.02,
                  cache: bool = True, cache_path: Optional[str] = None,
+                 cache_shards: bool = False,
                  deadline_reference_s: float = 1.0,
                  auto_deadline_s: Optional[float] = None,
                  resilience: Optional[ResiliencePolicy] = None,
@@ -271,16 +304,17 @@ class IsingService:
             self.policy, primary=lambda: self._solver,
             solver_name=solver, runs=self.runs, seed=self.seed,
             block=self.block)
-        # solver configuration digest: differently configured services
-        # sharing a persistent cache_path must never serve each other's
-        # results as equivalent (n_sweeps=20 vs 2000 is not the same answer)
-        cfg = repr((sorted(solver_opts.items()), self.block))
-        self._config_digest = hashlib.sha1(cfg.encode()).hexdigest()[:12]
+        self._config_digest = config_digest(solver_opts, self.block)
 
         self._cache_enabled = bool(cache)
         self._cache_path = cache_path
+        # sharded layout (16 shards by content-hash prefix) is opt-in for a
+        # standalone service and always-on under the fleet: one worker per
+        # file-wide flock is fine, N workers contending on one inode is not
+        self._cache_shards = bool(cache_shards)
+        load = load_sharded_json_cache if cache_shards else load_json_cache
         self._cache: dict[str, dict] = (
-            load_json_cache(cache_path) if cache and cache_path else {})
+            load(cache_path) if cache and cache_path else {})
         self._quarantined: set[str] = set()
 
         self._lock = threading.Condition()
@@ -303,6 +337,7 @@ class IsingService:
         self._errors = 0
         self._cancelled = 0
         self._shed = 0               # rejected with Overloaded at admission
+        self._shed_by_qos: collections.Counter = collections.Counter()
         self._degraded_admissions = 0
         self._cache_quarantined = 0
         self._latencies: collections.deque = collections.deque(maxlen=100_000)
@@ -322,6 +357,7 @@ class IsingService:
             self._submitted = self._completed = self._cache_hits = 0
             self._flushes = self._dispatches = self._errors = 0
             self._cancelled = self._shed = 0
+            self._shed_by_qos.clear()
             self._degraded_admissions = self._cache_quarantined = 0
             self._latencies.clear()
             self._batch_sizes.clear()
@@ -358,7 +394,8 @@ class IsingService:
 
     # -- client surface ----------------------------------------------------
     def submit(self, problem: Problem, deadline_s: Optional[float] = None,
-               budget: Optional[float] = None) -> ServeTicket:
+               budget: Optional[float] = None,
+               qos: str = DEFAULT_QOS) -> ServeTicket:
         """Queue one problem; returns immediately with a ticket.
 
         ``deadline_s`` maps to an effort budget via ``deadline_to_budget``
@@ -370,6 +407,9 @@ class IsingService:
         the ``degrade_budget`` ladder first, and only past the shed
         threshold rejects with :class:`Overloaded` — a degraded answer
         beats no answer, and a typed early rejection beats a timeout.
+        ``qos`` (``interactive``/``normal``/``batch``) scales those
+        thresholds per request, so batch traffic degrades and sheds first
+        while interactive traffic holds out longest.
         """
         with self._lock:
             if not self._running:
@@ -384,16 +424,18 @@ class IsingService:
                 f"solver {self.solver_name!r} takes N <= {caps.max_n}; "
                 f"got N={problem.n} (serve larger instances through a "
                 f"'chip-lns' service)")
+        qcls = resolve_qos(qos)
         if budget is None:
             budget = deadline_to_budget(
                 deadline_s, reference_s=self.deadline_reference_s)
         elif budget <= 0:
             raise ValueError(f"budget must be positive, got {budget}")
-        budget = self._admit(budget)
+        budget = self._admit(budget, qcls)
 
         ticket = ServeTicket()
         req = _Request(problem=problem, budget=budget, deadline_s=deadline_s,
-                       submitted=time.monotonic(), ticket=ticket)
+                       submitted=time.monotonic(), ticket=ticket,
+                       qos=qcls.name)
         ticket._bind(self, req)
 
         hit = self._cache_lookup(req)
@@ -406,7 +448,7 @@ class IsingService:
                 self._latencies.append(hit.latency_s)
             return ticket
 
-        key = (padded_size(problem.n, self.block), _budget_tier(budget))
+        key = batch_key(problem, budget, self.block)
         req.key = key
         with self._lock:
             if not self._running:
@@ -418,23 +460,33 @@ class IsingService:
             self._lock.notify_all()
         return ticket
 
-    def _admit(self, budget: Optional[float]) -> Optional[float]:
+    def _admit(self, budget: Optional[float],
+               qcls: Optional[QoSClass] = None) -> Optional[float]:
         """Overload admission control: shed past ``shed_pending`` queued
         requests, degrade the effort budget one ladder rung per
-        ``degrade_pending`` of queue depth before that."""
+        ``degrade_pending`` of queue depth before that. A request's QoS
+        class scales both thresholds (batch: 0.5x — first to suffer;
+        interactive: 1.5–2x — last), so overload lands on low-priority
+        work first without a separate queue per class."""
         p = self.policy
         if p.degrade_pending is None and p.shed_pending is None:
             return budget
+        dfac = qcls.degrade_factor if qcls is not None else 1.0
+        sfac = qcls.shed_factor if qcls is not None else 1.0
         with self._lock:
             depth = sum(len(v) for v in self._pending.values())
-            if p.shed_pending is not None and depth >= p.shed_pending:
+            if p.shed_pending is not None and depth >= p.shed_pending * sfac:
                 self._shed += 1
+                if qcls is not None:
+                    self._shed_by_qos[qcls.name] += 1
                 raise Overloaded(
                     f"service overloaded: {depth} requests queued "
-                    f"(shed threshold {p.shed_pending}); retry with "
-                    f"backoff")
-            if p.degrade_pending is not None and depth >= p.degrade_pending:
-                level = 1 + (depth - p.degrade_pending) // p.degrade_pending
+                    f"(shed threshold {p.shed_pending * sfac:g}); retry "
+                    f"with backoff")
+            degrade_at = (p.degrade_pending * dfac
+                          if p.degrade_pending is not None else None)
+            if degrade_at is not None and depth >= degrade_at:
+                level = 1 + int((depth - degrade_at) // degrade_at)
                 degraded = degrade_budget(budget, level)
                 if degraded != (budget if budget is not None else 1.0):
                     self._degraded_admissions += 1
@@ -474,6 +526,7 @@ class IsingService:
                 "errors": self._errors,
                 "cancelled": self._cancelled,
                 "shed": self._shed,
+                "shed_by_qos": dict(self._shed_by_qos),
                 "degraded_admissions": self._degraded_admissions,
                 "cache_hits": self._cache_hits,
                 "cache_hit_rate": (self._cache_hits / self._submitted
@@ -586,15 +639,22 @@ class IsingService:
         for r, o, res in zip(live, outcomes, results):
             if r.cancelled:
                 continue
-            if res is None:
-                r.ticket._fail(o.error)
-            else:
-                r.ticket._resolve(res)
+            self._deliver(r, o, res)
+
+    def _deliver(self, r: _Request, o, res: Optional[ServeResult]) -> None:
+        """Hand one flushed request's outcome to its ticket. Subclasses
+        (the fleet worker) interpose here — a fleet delivery must pass the
+        work ledger's epoch check first, so a flush whose lease was
+        reclaimed mid-solve is discarded instead of double-resolving."""
+        if res is None:
+            r.ticket._fail(o.error)
+        else:
+            r.ticket._resolve(res)
 
     # -- result cache ------------------------------------------------------
     def _cache_key(self, problem: Problem) -> str:
-        return (f"{self.solver_name}:{self.runs}:{self.seed}:"
-                f"{self._config_digest}:{problem.content_hash}")
+        return result_cache_key(self.solver_name, self.runs, self.seed,
+                                self._config_digest, problem)
 
     def _cache_lookup(self, req: _Request) -> Optional[ServeResult]:
         if not self._cache_enabled:
@@ -650,8 +710,9 @@ class IsingService:
             cache = dict(self._cache)
             drop = tuple(self._quarantined)
         if cache or drop:
-            store_json_cache(self._cache_path, cache,
-                             resolve=_higher_effort, drop=drop)
+            store = (store_sharded_json_cache if self._cache_shards
+                     else store_json_cache)
+            store(self._cache_path, cache, resolve=_higher_effort, drop=drop)
 
 
 def _higher_effort(old: dict, new: dict) -> dict:

@@ -20,13 +20,27 @@ defaulting to the writer's value). The tmp file is pid-unique so
 concurrent writers never truncate each other's half-written tmp. Stores
 stay best-effort — a cache is an optimization, so persistence failures
 never fail a solve.
+
+``load_sharded_json_cache`` / ``store_sharded_json_cache`` layer a
+16-way content-hash-prefix sharding on top: a cache logically at
+``<stem>.json`` lives as ``<stem>.shards/shard-<x>.json`` (``x`` the
+first hex nibble of each key's trailing content hash), so N concurrent
+writers contend on a lock per *shard* instead of one file-wide flock —
+the multi-worker serve fleet's result/oracle stores stop serializing on
+a single inode. A monolithic file found at the legacy path is migrated
+into the shards once (entries merged shard-by-shard, then the file is
+renamed to ``<path>.migrated``), so existing caches carry over
+transparently. Per-shard semantics are exactly ``store_json_cache``:
+merge-on-store, per-key ``resolve``, quarantine ``drop=``, corrupt
+shards moved to ``.corrupt``.
 """
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import json
 import os
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
 try:
     import fcntl
@@ -102,3 +116,99 @@ def store_json_cache(path: str, cache: dict,
             os.replace(tmp, path)
     except OSError:
         pass
+
+
+# --------------------------------------------------------------------------
+# Sharded stores: 16 shards keyed by content-hash prefix.
+# --------------------------------------------------------------------------
+
+CACHE_SHARDS = 16
+
+_HEX = "0123456789abcdef"
+
+
+def shard_of(key: str) -> int:
+    """Shard index (0..15) for a cache key.
+
+    Keys in this repo end in a ``:``-separated hex content hash
+    (``{solver}:{runs}:{seed}:{cfg}:{content_hash}`` for serve results,
+    bare ``{content_hash}`` for the oracle), so the first hex nibble of
+    the trailing component spreads keys uniformly. Keys that don't look
+    like that (autotune keys, hand-written tests) fall back to sha1 of
+    the whole key — still deterministic, still uniform.
+    """
+    tail = key.rsplit(":", 1)[-1]
+    if tail and tail[0] in _HEX:
+        return int(tail[0], 16)
+    digest = hashlib.sha1(key.encode()).hexdigest()
+    return int(digest[0], 16)
+
+
+def shard_paths(path: str) -> list:
+    """The 16 shard files backing a cache logically at ``path``.
+
+    ``experiments/oracle_cache.json`` →
+    ``experiments/oracle_cache.shards/shard-<x>.json``.
+    """
+    stem = path[:-5] if path.endswith(".json") else path
+    return [os.path.join(f"{stem}.shards", f"shard-{_HEX[i]}.json")
+            for i in range(CACHE_SHARDS)]
+
+
+def _migrate_monolith(path: str) -> None:
+    """One-time transparent migration of a legacy monolithic cache file
+    into the shard directory. The monolith's entries are merged into
+    their shards (disk-preferred on conflict: the shards are newer by
+    construction — they only exist if a sharded writer already ran) and
+    the file is renamed to ``<path>.migrated`` so this never re-runs.
+    Best-effort and idempotent: a crash mid-migration re-merges the
+    remaining monolith on the next load, which the merge makes safe.
+    """
+    if not os.path.exists(path):
+        return
+    legacy = load_json_cache(path)
+    if legacy:
+        buckets: dict = {}
+        for key, val in legacy.items():
+            buckets.setdefault(shard_of(key), {})[key] = val
+        shards = shard_paths(path)
+        for idx, entries in buckets.items():
+            # disk (shard) wins conflicts: resolve(old, new) -> old
+            store_json_cache(shards[idx], entries, resolve=lambda old, new: old)
+    try:
+        os.replace(path, path + ".migrated")
+    except OSError:
+        pass
+
+
+def load_sharded_json_cache(path: str) -> dict:
+    """Union of all shards of the cache logically at ``path``, migrating
+    a monolithic file found at ``path`` itself first."""
+    _migrate_monolith(path)
+    merged: dict = {}
+    for shard in shard_paths(path):
+        merged.update(load_json_cache(shard))
+    return merged
+
+
+def store_sharded_json_cache(path: str, cache: dict,
+                             resolve: Optional[Callable] = None,
+                             drop: Iterable = ()) -> None:
+    """``store_json_cache`` semantics over the 16-shard layout.
+
+    Entries and ``drop`` keys are routed to their shards; only shards
+    with work are touched, so concurrent writers whose keys hash apart
+    never contend on the same flock. A legacy monolith at ``path`` is
+    migrated first so its entries participate in the merge.
+    """
+    _migrate_monolith(path)
+    shards = shard_paths(path)
+    buckets: dict = {}
+    for key, val in cache.items():
+        buckets.setdefault(shard_of(key), {})[key] = val
+    drops: dict = {}
+    for key in drop:
+        drops.setdefault(shard_of(key), []).append(key)
+    for idx in sorted(set(buckets) | set(drops)):
+        store_json_cache(shards[idx], buckets.get(idx, {}),
+                        resolve=resolve, drop=tuple(drops.get(idx, ())))

@@ -7,6 +7,7 @@ import pytest
 import repro.api.oracle as oracle_mod
 from repro.api import (Problem, ProblemSuite, best_known_energies,
                        get_solver, list_solvers, padded_size, solve_suite)
+from repro.utils import load_sharded_json_cache, shard_of, shard_paths
 
 
 # -- Problem ----------------------------------------------------------------
@@ -171,8 +172,11 @@ def test_oracle_cache_roundtrip(tmp_path, monkeypatch):
     path = str(tmp_path / "oracle.json")
     suite = ProblemSuite.random(14, 0.5, 2, seed=5)
     bk = best_known_energies(suite, path=path)
-    assert (tmp_path / "oracle.json").exists()
-    entries = json.load(open(path))
+    # sharded layout: entries land in oracle.shards/shard-<x>.json, keyed
+    # by content-hash first nibble — never a monolithic oracle.json
+    assert (tmp_path / "oracle.shards").is_dir()
+    assert not (tmp_path / "oracle.json").exists()
+    entries = load_sharded_json_cache(path)
     assert set(entries) == set(suite.hashes)
     assert all(e["method"] == "brute_force" for e in entries.values())  # n<=20
 
@@ -218,42 +222,48 @@ def test_oracle_store_handles_bare_filename(tmp_path, monkeypatch):
     monkeypatch.chdir(tmp_path)
     suite = ProblemSuite.random(10, 0.5, 1, seed=3)
     best_known_energies(suite, path="oc.json")      # no directory component
-    assert (tmp_path / "oc.json").exists()
+    assert (tmp_path / "oc.shards").is_dir()
+    assert set(load_sharded_json_cache("oc.json")) == set(suite.hashes)
 
 
 def test_reconcile_upgrades_stale_oracle(tmp_path):
     path = str(tmp_path / "oracle.json")
     suite = ProblemSuite.random(12, 0.5, 1, seed=6)
     bk = best_known_energies(suite, path=path)      # exact (brute force)
-    # poison the cache with a stale, weaker entry
-    stale = json.load(open(path))
-    stale[suite[0].content_hash]["energy"] = float(bk[0]) + 50.0
-    json.dump(stale, open(path, "w"))
+    # poison the cache with a stale, weaker entry — edit its shard
+    # directly (the store's min-merge would rightly refuse the downgrade)
+    h = suite[0].content_hash
+    shard = shard_paths(path)[shard_of(h)]
+    stale = json.load(open(shard))
+    stale[h]["energy"] = float(bk[0]) + 50.0
+    json.dump(stale, open(shard, "w"))
     rep = solve_suite(suite, "sa-numpy", runs=16, seed=0, oracle_path=path)
     # the solve beat the stale entry: scored against its own better energy...
     assert rep.best_known[0] <= rep.best_energy[0] + 1e-9
     # ...and the improvement was persisted back to the cache
-    assert json.load(open(path))[suite[0].content_hash]["energy"] \
+    assert load_sharded_json_cache(path)[h]["energy"] \
         <= rep.best_energy[0] + 1e-9
 
 
 def test_oracle_cache_corruption_quarantined_not_crashed(tmp_path):
-    """A corrupt/truncated cache file is moved aside (<path>.corrupt), the
-    energies are recomputed, and a clean cache is rebuilt in place."""
+    """A corrupt/truncated shard is moved aside (<shard>.corrupt), the
+    energies are recomputed, and a clean shard is rebuilt in place."""
+    import pathlib
     path = tmp_path / "oracle.json"
     suite = ProblemSuite.workload("mis", size=8, num_problems=2, seed=5)
     bk = best_known_energies(suite, path=str(path))
-    good = path.read_text()
+    shard = pathlib.Path(shard_paths(str(path))[shard_of(suite[0].content_hash)])
+    good = shard.read_text()
 
     for garbage in (good[: len(good) // 2],       # truncated writer crash
                     "{not json at all",           # mangled by hand
                     ""):                          # zero-length file
-        path.write_text(garbage)
+        shard.write_text(garbage)
         out = best_known_energies(suite, path=str(path))
         np.testing.assert_array_equal(out, bk)    # recomputed, not crashed
-        quarantined = tmp_path / "oracle.json.corrupt"
+        quarantined = shard.with_name(shard.name + ".corrupt")
         assert quarantined.read_text() == garbage
-        assert json.loads(path.read_text()).keys() == set(suite.hashes)
+        assert set(load_sharded_json_cache(str(path))) == set(suite.hashes)
         quarantined.unlink()
 
 
@@ -267,12 +277,13 @@ def test_reconcile_keeps_better_bound_for_workload_problems(tmp_path):
     # a worse candidate must NOT displace the exact cached bound
     out = api.reconcile_best_known(suite, bk + 25.0, path=path)
     np.testing.assert_array_equal(out, bk)
-    assert json.load(open(path))[suite[0].content_hash]["energy"] == bk[0]
+    assert load_sharded_json_cache(path)[suite[0].content_hash]["energy"] \
+        == bk[0]
     # a (hypothetically) better candidate wins and is persisted
     out = api.reconcile_best_known(suite, bk - 4.0, path=path,
                                    method="test-better")
     np.testing.assert_array_equal(out, bk - 4.0)
-    entry = json.load(open(path))[suite[0].content_hash]
+    entry = load_sharded_json_cache(path)[suite[0].content_hash]
     assert entry["energy"] == bk[0] - 4.0 and entry["method"] == "test-better"
 
 

@@ -17,6 +17,7 @@ from repro.problems import problem_set
 from repro.solvers import (BRUTE_FORCE_MAX_N, brute_force_ground_state,
                            parallel_tempering_jax_runs, tabu_search,
                            tabu_search_jax, tabu_search_jax_runs)
+from repro.utils import load_sharded_json_cache, store_sharded_json_cache
 
 
 # ---------------------------------------------------------------------------
@@ -174,8 +175,7 @@ def test_oracle_refresh_is_one_batched_dispatch(tmp_path, monkeypatch):
         np.testing.assert_array_equal(
             best_known_energies(suite, path=path), bk)
         assert len(calls) == 1
-    import json
-    entries = json.load(open(path))
+    entries = load_sharded_json_cache(path)
     assert set(entries) == set(suite.hashes)
     assert all(e["method"] == "tabu-jax" for e in entries.values())
     # the oracle energies are real: a direct tabu-jax solve can't beat them
@@ -187,17 +187,15 @@ def test_stale_heuristic_entry_inside_exact_tier_is_recomputed(tmp_path):
     # entries cached under the OLD 20-spin boundary carry method='tabu'
     # for 20 < N <= 24; they may sit above the true ground state and must
     # not be served as best-known now that the exact tier covers them
-    import json
-    path = tmp_path / "oracle.json"
+    path = str(tmp_path / "oracle.json")
     p = Problem.random_qubo(21, 0.5, seed=9)
-    bk = best_known_energies(ProblemSuite([p]), path=str(path))
-    stale = json.load(open(path))
-    stale[p.content_hash] = {"energy": float(bk[0]) + 30.0, "method": "tabu",
-                             "n": 21, "kind": p.kind}
-    json.dump(stale, open(path, "w"))
-    out = best_known_energies(ProblemSuite([p]), path=str(path))
+    bk = best_known_energies(ProblemSuite([p]), path=path)
+    stale = {p.content_hash: {"energy": float(bk[0]) + 30.0, "method": "tabu",
+                              "n": 21, "kind": p.kind}}
+    store_sharded_json_cache(path, stale)        # caller wins: injects stale
+    out = best_known_energies(ProblemSuite([p]), path=path)
     np.testing.assert_array_equal(out, bk)       # recomputed exactly
-    entry = json.load(open(path))[p.content_hash]
+    entry = load_sharded_json_cache(path)[p.content_hash]
     assert entry["method"] == "brute_force" and entry["energy"] == bk[0]
 
 
@@ -206,7 +204,6 @@ def test_brute_force_tier_boundary_is_one_shared_constant():
     assert oracle_mod.BRUTE_FORCE_MAX_N == solver_const
     assert get_solver("brute-force").caps.max_n == solver_const
     # method actually switches at the shared boundary
-    import json
     import tempfile, os
     small = Problem.random_qubo(22, 0.5, seed=1)    # 20 < 22 <= 24: exact now
     big = Problem.random_qubo(solver_const + 2, 0.5, seed=1)
@@ -214,7 +211,7 @@ def test_brute_force_tier_boundary_is_one_shared_constant():
         path = os.path.join(d, "o.json")
         best_known_energies(ProblemSuite([small, big]), path=path)
         methods = {e["n"]: e["method"]
-                   for e in json.load(open(path)).values()}
+                   for e in load_sharded_json_cache(path).values()}
         assert methods[22] == "brute_force"
         assert methods[solver_const + 2] == "tabu-jax"
 

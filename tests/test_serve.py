@@ -13,7 +13,8 @@ import pytest
 from repro.api import (Problem, ProblemSuite, deadline_to_budget, get_solver,
                        solve_suite)
 from repro.serve import IsingService
-from repro.utils import load_json_cache, store_json_cache
+from repro.utils import (load_json_cache, load_sharded_json_cache,
+                         store_json_cache)
 
 RUNS = 4
 SEED = 3
@@ -269,16 +270,16 @@ def test_oracle_store_keeps_lower_energy_on_conflict(tmp_path):
     # a stale worker storing a weaker bound for the same key loses...
     _store(path, {"h1": {"energy": -3.0, "method": "b"},
                   "h2": {"energy": -1.0, "method": "b"}})
-    cache = load_json_cache(path)
+    cache = load_sharded_json_cache(path)
     assert cache["h1"]["energy"] == -5.0         # min-merge kept the best
     assert cache["h2"]["energy"] == -1.0         # union kept the new key
     # ...and a better bound wins
     _store(path, {"h1": {"energy": -8.0, "method": "c"}})
-    assert load_json_cache(path)["h1"]["method"] == "c"
+    assert load_sharded_json_cache(path)["h1"]["method"] == "c"
     # energy TIES go to the new entry: the exact tier re-verifying a
     # heuristic bound must persist its method or it recomputes forever
     _store(path, {"h1": {"energy": -8.0, "method": "brute_force"}})
-    assert load_json_cache(path)["h1"]["method"] == "brute_force"
+    assert load_sharded_json_cache(path)["h1"]["method"] == "brute_force"
 
 
 # -- failure isolation (satellite: flush blast radius regression) ------------

@@ -162,6 +162,47 @@ def test_resilient_step_nan_guard():
         run(0, None)
 
 
+def test_resilient_step_propagates_programming_bugs():
+    """Regression: a bare RuntimeError (jax tracer misuse, API bugs) must
+    fail loudly on the FIRST call — not burn the restore/retry budget
+    replaying a deterministic bug four times before surfacing it wrapped
+    in a StepFailure."""
+    calls = {"n": 0, "restores": 0}
+
+    def buggy(state, batch):
+        calls["n"] += 1
+        raise RuntimeError("leaked tracer: jax API misuse")
+
+    def restore():
+        calls["restores"] += 1
+        return 0
+
+    run = resilient_step(buggy, restore, max_retries=3)
+    with pytest.raises(RuntimeError) as ei:
+        run(0, None)
+    assert not isinstance(ei.value, StepFailure)   # the original, unwrapped
+    assert calls["n"] == 1 and calls["restores"] == 0
+
+
+def test_resilient_step_retries_xla_runtime_errors():
+    """Genuine device failures (the XLA runtime error types) still get the
+    restore-and-replay treatment."""
+    from repro.distributed.fault_tolerance import RETRYABLE_ERRORS
+    xla_types = [e for e in RETRYABLE_ERRORS if e is not StepFailure]
+    assert xla_types, "jax runtime error types missing from RETRYABLE_ERRORS"
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise xla_types[0]("RESOURCE_EXHAUSTED: device OOM")
+        return state + 1, {"loss": 0.5}
+
+    run = resilient_step(flaky, lambda: 7, max_retries=2)
+    state, _ = run(0, None)
+    assert state == 8 and calls["n"] == 2          # restored to 7, then +1
+
+
 def test_straggler_detector():
     det = StragglerDetector(patience=3)
     flagged = False
