@@ -89,6 +89,36 @@ def run(full: bool = False):
             "subset_max_n": caps.max_n,
         }
 
+    # -- N=128 decomposition row: chip-lns vs fabric-jax ------------------
+    # The first N > 64 line in the perf trajectory: both decomposition
+    # tiers on one 128-spin instance at identical seeds/effort. chip-lns
+    # anneals one block per dispatch position; fabric-jax one dispatch per
+    # color phase — the ledger shapes are pinned here, the wall/energy
+    # columns track the trajectory.
+    import numpy as np
+    from repro.core.engine import lns_blocks
+    p128 = Problem.maxcut(128, density=0.5, seed=717)
+    lns_runs, lns_outer = (8, 8) if full else (4, 4)
+    dec = {}
+    for name in ("chip-lns", "fabric-jax"):
+        solver = get_solver(name, anneal_sweeps=0.5, inner_runs=4,
+                            outer_sweeps=lns_outer)
+        rep = solver.solve(p128, runs=lns_runs, seed=11)
+        dec[name] = {"best_energy": float(np.min(rep.energies[0])),
+                     "wall_s": float(rep.wall_s),
+                     "dispatches": int(rep.dispatches)}
+    n_tiles = len(lns_blocks(128, 63))
+    if dec["chip-lns"]["dispatches"] != lns_outer:
+        raise RuntimeError(
+            f"chip-lns issued {dec['chip-lns']['dispatches']} dispatches "
+            f"for {lns_outer} outer sweeps — the one-dispatch-per-sweep "
+            f"stacking regressed")
+    if dec["fabric-jax"]["dispatches"] != 2 * lns_outer:
+        raise RuntimeError(
+            f"fabric-jax issued {dec['fabric-jax']['dispatches']} "
+            f"dispatches for 2 colors x {lns_outer} sweeps ({n_tiles} "
+            f"tiles) — the per-color-phase ledger regressed")
+
     sb_cut = results["sb-jax"]["success_rate_maxcut"]
     engine_cut = results["engine"]["success_rate_maxcut"]
     if sb_cut is None or engine_cut is None or sb_cut < engine_cut:
@@ -102,6 +132,8 @@ def run(full: bool = False):
                                 "problems": per_cut},
                "suite_dispatch_buckets": suite.num_dispatches(),
                "solvers": results,
+               "decomposition_128": {"n": 128, "runs": lns_runs,
+                                     "outer_sweeps": lns_outer, **dec},
                "wall_time": time.strftime("%Y-%m-%d %H:%M:%S")}
     record("solver_matrix", payload)
     write_root_bench("BENCH_solvers.json", payload)

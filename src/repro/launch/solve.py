@@ -7,6 +7,13 @@
     PYTHONPATH=src python -m repro.launch.solve --solver chip-lns \
         --workload maxcut --spins 128 --problems 1 --runs 16
 
+    # 2000-spin Gset Max-Cut on the mesh-sharded mega-fabric (8 emulated
+    # dies; prints the per-color dispatch/occupancy ledger)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.solve --solver fabric-jax \
+        --workload gset --spins 2000 --problems 1 --runs 4 \
+        --mesh-devices 8 --no-oracle
+
     # NP-hard zoo: coloring / mis / vertex-cover / 3sat / tsp
     PYTHONPATH=src python -m repro.launch.solve --solver tabu \
         --workload mis --spins 12 --runs 32
@@ -39,7 +46,7 @@ import argparse
 from ..api import ProblemSuite, get_solver, list_solvers, solve_suite
 
 #: --workload values that are plain Problem constructors, not zoo entries.
-_BUILTIN = ("random-qubo", "maxcut")
+_BUILTIN = ("random-qubo", "maxcut", "gset")
 
 
 def build_suite(workload: str, n: int, density: float, problems: int,
@@ -57,6 +64,14 @@ def build_suite(workload: str, n: int, density: float, problems: int,
     if workload == "maxcut":
         return ProblemSuite([Problem.maxcut(n, density, seed=seed + i)
                              for i in range(problems)])
+    if workload == "gset":
+        # Gset-style sparse Max-Cut at fabric scale: --density is the
+        # expected vertex degree here (G1-class graphs are ~degree-6 at
+        # every N, not a fixed edge fraction)
+        from ..problems.gset import gset_problem
+        degree = density if density > 1 else 6.0
+        return ProblemSuite([gset_problem(n, seed=seed + i, degree=degree)
+                             for i in range(problems)])
     from ..workloads import get_workload
     gen = get_workload(workload).random_instance
     kw = {"density": density} \
@@ -70,7 +85,8 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
           perturbation: bool = True, autotune: bool = False,
           budget: float | None = None, use_cache: bool = True,
           workload: str = "random-qubo", chips: int = 1,
-          mismatch_sigma: float = 0.0, tau_leak_spread: float = 0.0):
+          mismatch_sigma: float = 0.0, tau_leak_spread: float = 0.0,
+          mesh_devices: int | None = None, oracle: bool = True):
     """Solve one workload cell through the registry; returns
     ``(report, suite)`` — the oracle-attached
     :class:`repro.api.SolveReport` plus the suite it solved (callers need
@@ -82,6 +98,8 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
                     variant="perturbation" if perturbation else "gd")
     elif solver == "chip-lns":
         opts = dict(backend=backend)
+    elif solver == "fabric-jax":
+        opts = dict(backend=backend, mesh_devices=mesh_devices)
     elif solver == "ode-jax":
         from ..physics import VariationModel
         opts = dict(variant="perturbation" if perturbation else "gd",
@@ -90,7 +108,8 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
                         j_mismatch_sigma=mismatch_sigma,
                         tau_leak_spread=tau_leak_spread))
     return solve_suite(suite, solver=solver, runs=runs, seed=seed + 1,
-                       budget=budget, use_cache=use_cache, **opts), suite
+                       budget=budget, use_cache=use_cache, oracle=oracle,
+                       **opts), suite
 
 
 def _print_native(workload: str, suite: ProblemSuite, report) -> None:
@@ -136,6 +155,16 @@ def main():
                          "this workload and persist the winner")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the disk-backed best-known oracle cache")
+    ap.add_argument("--no-oracle", action="store_true",
+                    help="skip the best-known oracle entirely (success "
+                         "metrics unavailable) — the only sane setting at "
+                         "Gset scale, where the tabu refresh would dwarf "
+                         "the solve")
+    ap.add_argument("--mesh-devices", type=int, default=None,
+                    help="[fabric-jax] dies in the fabric mesh (default: "
+                         "all visible devices; set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K before "
+                         "launch to emulate a K-die fabric on one host)")
     ap.add_argument("--chips", type=int, default=1,
                     help="[ode-jax] virtual-chip fleet size: every chip "
                          "gets its own seeded variation draw and all "
@@ -163,19 +192,34 @@ def main():
         budget=args.budget, use_cache=not args.no_cache,
         workload=args.workload, chips=args.chips,
         mismatch_sigma=args.mismatch_sigma,
-        tau_leak_spread=args.tau_leak_spread)
+        tau_leak_spread=args.tau_leak_spread,
+        mesh_devices=args.mesh_devices, oracle=not args.no_oracle)
     plan = report.meta.get("engine_plan")
     if plan:
         print(f"[engine] path={plan['path']} block_r={plan['block_r']} "
               f"j_dtype={plan['j_dtype']} ({plan['reason']})")
+    fab = report.meta.get("fabric")
+    if fab:
+        print(f"[fabric] {fab['mesh_devices']} dies, "
+              f"{fab['n_colors']} colors x "
+              f"{report.meta['outer_sweeps']} sweeps = "
+              f"{fab['dispatches']} dispatches, "
+              f"{fab['field_exchanges']} field exchanges")
+        for occ in fab["occupancy"]:
+            per_p = [f"p{k[1:]}:{v['tiles']}t/" f"{v['dies_busy']}d"
+                     f"(+{v['pad_tiles']}pad)"
+                     for k, v in occ.items() if k != "color"]
+            print(f"[fabric]   color {occ['color']}: peak "
+                  f"{fab['color_peaks'][occ['color']]} tiles/die — "
+                  + " ".join(per_p))
     print(report.summary())
     if args.workload not in _BUILTIN:
         _print_native(args.workload, suite, report)
-    elif args.workload == "maxcut":
+    elif args.workload in ("maxcut", "gset"):
         from ..core.hamiltonian import maxcut_value
         for i, p in enumerate(suite):
             cut = float(maxcut_value(p.meta["W"], report.best_sigma[i]))
-            print(f"[maxcut #{i}] N={p.n} cut weight={cut:g}")
+            print(f"[{args.workload} #{i}] N={p.n} cut weight={cut:g}")
 
 
 if __name__ == "__main__":

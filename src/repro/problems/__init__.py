@@ -14,7 +14,10 @@ from .random_qubo import (random_ising_problem, problem_set,
                           paper_benchmark_suite, ProblemSet)
 from .maxcut import random_maxcut, maxcut_problem
 from .partition import number_partitioning
+from .gset import (parse_gset, dump_gset, load_gset, random_gset,
+                   gset_problem, cut_from_energy)
 
 __all__ = ["random_ising_problem", "paper_benchmark_suite", "ProblemSet",
            "random_maxcut", "maxcut_problem", "number_partitioning",
-           "problem_set"]
+           "problem_set", "parse_gset", "dump_gset", "load_gset",
+           "random_gset", "gset_problem", "cut_from_energy"]

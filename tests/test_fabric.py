@@ -1,0 +1,346 @@
+"""Mega-fabric tier: tile layout, sharded field exchange, checkerboard
+LNS, Gset instances, and the sharding edge cases the fabric rides on."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Problem
+from repro.api.registry import get_solver
+from repro.core.engine import AnnealEngine, BlockLNS, lns_blocks
+from repro.distributed.fabric import (FabricLayout, FabricLNS,
+                                      FieldExchange, fabric_mesh)
+from repro.problems.gset import (cut_from_energy, dump_gset, gset_problem,
+                                 parse_gset, random_gset)
+
+SEED = 42
+
+
+def _engine():
+    import dataclasses as dc
+
+    from repro.core.device_model import DeviceModel
+    dev = dc.replace(DeviceModel(), anneal_sweeps=0.5)
+    return AnnealEngine(device=dev, path="scan")
+
+
+# ---------------------------------------------------------------------------
+# FabricLayout
+# ---------------------------------------------------------------------------
+
+def test_layout_tiles_partition_and_color():
+    lay = FabricLayout.build(200, n_dies=4)
+    assert lay.n_tiles == len(lns_blocks(200, 63))
+    # tiles partition [0, n)
+    all_idx = np.concatenate(lay.tiles)
+    assert np.array_equal(np.sort(all_idx), np.arange(200))
+    # checkerboard: adjacent tiles never share a color
+    for t in range(lay.n_tiles - 1):
+        assert lay.color_of(t) != lay.color_of(t + 1)
+    assert lay.n_colors == 2
+
+
+def test_layout_single_tile_has_one_color():
+    lay = FabricLayout.build(40, n_dies=2)
+    assert lay.n_tiles == 1
+    assert lay.n_colors == 1
+
+
+def test_layout_color_phases_spread_over_dies():
+    # 8 tiles over 4 dies: every color phase must use ALL dies (the naive
+    # t % n_dies assignment aliases with the parity coloring and piles a
+    # phase onto same-parity dies)
+    lay = FabricLayout.build(8 * 63, n_dies=4)
+    assert lay.n_tiles == 8
+    for c in range(2):
+        occ = lay.occupancy(c)
+        assert occ["tiles"] == 4
+        assert occ["dies_busy"] == 4
+        assert occ["dies_idle"] == 0
+        assert occ["max_tiles_per_die"] == 1
+        assert occ["pad_tiles"] == 0
+
+
+def test_layout_occupancy_counts_idle_and_padding():
+    # 3 tiles, 2 colors -> color 0 has 2 tiles, color 1 has 1; on 4 dies
+    # the idle dies and per-die padding must be accounted
+    lay = FabricLayout.build(150, n_dies=4)
+    assert lay.n_tiles == 3
+    occ0, occ1 = lay.occupancy(0), lay.occupancy(1)
+    assert occ0["tiles"] == 2 and occ1["tiles"] == 1
+    assert occ0["dies_busy"] + occ0["dies_idle"] == 4
+    assert occ1["max_tiles_per_die"] == 1
+
+
+def test_layout_rejects_bad_args():
+    with pytest.raises(ValueError):
+        FabricLayout.build(100, n_dies=0)
+    with pytest.raises(ValueError):
+        fabric_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# FieldExchange
+# ---------------------------------------------------------------------------
+
+def test_field_exchange_matches_host_matmul_exactly():
+    rng = np.random.default_rng(SEED)
+    n = 130                               # not divisible by any mesh size
+    J = rng.integers(-15, 16, size=(n, n)).astype(np.float64)
+    J = np.triu(J, 1) + np.triu(J, 1).T
+    s = rng.choice([-1.0, 1.0], size=(5, n))
+    ex = FieldExchange(J, fabric_mesh())
+    h = ex.fields(s)
+    # integer J x (+-1) spins: float32 sums are exact, so the sharded
+    # psum result equals the float64 host matmul bitwise
+    assert np.array_equal(h.astype(np.float64), s @ J)
+    assert ex.exchanges == 1
+    ex.fields(s)
+    assert ex.exchanges == 2
+
+
+def test_field_exchange_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        FieldExchange(np.zeros((4, 5)), fabric_mesh())
+    ex = FieldExchange(np.zeros((6, 6)), fabric_mesh())
+    with pytest.raises(ValueError):
+        ex.fields(np.ones((2, 7)))
+
+
+# ---------------------------------------------------------------------------
+# FabricLNS
+# ---------------------------------------------------------------------------
+
+def _solve_fabric(n=150, restarts=3, sweeps=2, seed=SEED, **kw):
+    rng = np.random.default_rng(seed)
+    J = rng.integers(-15, 16, size=(n, n)).astype(np.float64)
+    J = np.triu(J, 1) + np.triu(J, 1).T
+    lns = FabricLNS(_engine(), inner_runs=4, **kw)
+    out, d = lns.solve([J], restarts=restarts, outer_sweeps=sweeps,
+                       seed=seed)
+    return J, lns, out, d
+
+
+def test_fabric_dispatches_are_colors_times_sweeps():
+    _, lns, _, d = _solve_fabric(n=150, sweeps=3)
+    assert d == 2 * 3                     # never one dispatch per tile
+    assert lns.ledger["dispatches"] == d
+    assert lns.ledger["n_tiles"] == [3]
+    # one field exchange per (problem, color phase, sweep)
+    assert lns.ledger["field_exchanges"] == 2 * 3
+
+
+def test_fabric_monotone_and_energy_identity():
+    J, _, out, _ = _solve_fabric()
+    (e, sig, e0), = out
+    assert np.all(e <= e0 + 1e-9)         # incumbents never regress
+    s = sig.astype(np.float64)
+    e_check = -0.5 * np.einsum("ri,ij,rj->r", s, J, s)
+    assert np.array_equal(e, e_check)     # returned energies are exact
+
+
+def test_fabric_deterministic_per_seed():
+    _, _, out_a, _ = _solve_fabric(seed=7)
+    _, _, out_b, _ = _solve_fabric(seed=7)
+    _, _, out_c, _ = _solve_fabric(seed=8)
+    assert np.array_equal(out_a[0][0], out_b[0][0])
+    assert np.array_equal(out_a[0][1], out_b[0][1])
+    assert not np.array_equal(out_c[0][0], out_a[0][0])
+
+
+def test_fabric_same_init_stream_as_block_lns():
+    # identical (seed, restarts) must start both decomposition tiers from
+    # the same initial states — the duel benchmark compares them at equal
+    # footing, so the rng draw order is contract
+    rng = np.random.default_rng(3)
+    J = rng.integers(-15, 16, size=(100, 100)).astype(np.float64)
+    J = np.triu(J, 1) + np.triu(J, 1).T
+    fab = FabricLNS(_engine(), inner_runs=4)
+    blk = BlockLNS(_engine(), inner_runs=4)
+    out_f, _ = fab.solve([J], restarts=4, outer_sweeps=0, seed=5)
+    out_b, _ = blk.solve([J], restarts=4, outer_sweeps=0, seed=5)
+    assert np.array_equal(out_f[0][2], out_b[0][2])   # same init energies
+    assert np.array_equal(out_f[0][1], out_b[0][1])   # same init states
+
+
+def test_fabric_multi_problem_batch():
+    rng = np.random.default_rng(11)
+    Js = []
+    for n in (100, 150):
+        J = rng.integers(-15, 16, size=(n, n)).astype(np.float64)
+        Js.append(np.triu(J, 1) + np.triu(J, 1).T)
+    lns = FabricLNS(_engine(), inner_runs=4)
+    out, d = lns.solve(Js, restarts=2, outer_sweeps=2, seed=SEED)
+    assert d == 2 * 2                     # both problems share dispatches
+    for (e, sig, e0), J in zip(out, Js):
+        assert sig.shape == (2, J.shape[0])
+        assert np.all(e <= e0 + 1e-9)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count)")
+def test_fabric_bitwise_mesh_invariant():
+    _, _, out_1, _ = _solve_fabric(mesh=fabric_mesh(1))
+    _, _, out_k, _ = _solve_fabric(mesh=fabric_mesh(len(jax.devices())))
+    assert np.array_equal(out_1[0][0], out_k[0][0])
+    assert np.array_equal(out_1[0][1], out_k[0][1])
+
+
+def test_fabric_registry_small_n_bit_identical_to_engine():
+    p = Problem.maxcut(32, density=0.5, seed=SEED)
+    rep_f = get_solver("fabric-jax").solve(p, runs=4, seed=SEED)
+    rep_e = get_solver("engine").solve(p, runs=4, seed=SEED)
+    assert np.array_equal(rep_f.energies[0], rep_e.energies[0])
+    assert np.array_equal(rep_f.best_sigma[0], rep_e.best_sigma[0])
+
+
+def test_fabric_registry_ledger_and_meta():
+    p = gset_problem(130, seed=SEED, degree=5.0)
+    s = get_solver("fabric-jax", anneal_sweeps=0.5, inner_runs=4,
+                   outer_sweeps=2)
+    rep = s.solve(p, runs=2, seed=SEED)
+    fab = rep.meta["fabric"]
+    assert rep.dispatches == fab["n_colors"] * 2
+    assert len(fab["per_sweep"]) == 2
+    for rec in fab["per_sweep"]:
+        assert set(rec) >= {"t_fields", "t_assemble", "t_engine",
+                            "t_accept", "t_total"}
+    assert fab["color_peaks"] and fab["restarts"] == 2
+
+
+# ---------------------------------------------------------------------------
+# BlockLNS hoist regression (satellite: precompute out of the sweep loop)
+# ---------------------------------------------------------------------------
+
+def test_block_lns_dispatch_count_and_no_per_sweep_restack(monkeypatch):
+    import repro.api.batching as batching
+    calls = {"pad_stack": 0}
+    real = batching.pad_stack
+
+    def counting(*a, **kw):
+        calls["pad_stack"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(batching, "pad_stack", counting)
+    rng = np.random.default_rng(SEED)
+    J = rng.integers(-15, 16, size=(100, 100)).astype(np.float64)
+    J = np.triu(J, 1) + np.triu(J, 1).T
+    lns = BlockLNS(_engine(), inner_runs=4)
+    _, d = lns.solve([J], restarts=2, outer_sweeps=5, seed=SEED)
+    assert d == 5                         # one dispatch per outer sweep
+    # the batch template is hoisted: no per-sweep re-stack/re-pad at all
+    assert calls["pad_stack"] == 0
+    t = lns.last_timings
+    assert t["dispatches"] == 5
+    assert t["t_engine"] > 0 and t["t_host"] >= 0
+    assert t["t_total"] >= t["t_engine"]
+
+
+# ---------------------------------------------------------------------------
+# Gset instances
+# ---------------------------------------------------------------------------
+
+def test_gset_roundtrip():
+    W = random_gset(60, seed=SEED, degree=5.0, max_w=3)
+    W2 = parse_gset(dump_gset(W))
+    assert np.array_equal(W, W2)
+
+
+def test_gset_parse_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_gset("")
+    with pytest.raises(ValueError):
+        parse_gset("3\n1 2 1")                     # bad header
+    with pytest.raises(ValueError):
+        parse_gset("3 2\n1 2 1")                   # edge count mismatch
+    with pytest.raises(ValueError):
+        parse_gset("3 1\n1 4 1")                   # endpoint out of range
+    with pytest.raises(ValueError):
+        parse_gset("3 1\n2 2 1")                   # self-loop
+
+
+def test_gset_torus_kind():
+    W = random_gset(25, seed=SEED, kind="torus")
+    assert np.array_equal(W, W.T)
+    # 4-regular grid: every vertex touches exactly 4 edges
+    assert np.all((W != 0).sum(axis=0) == 4)
+    assert set(np.unique(W)) <= {-1, 0, 1}
+    with pytest.raises(ValueError):
+        random_gset(24, kind="torus")              # not a square n
+
+
+def test_gset_problem_end_to_end_decode_verify():
+    from repro.core.hamiltonian import maxcut_value
+    p = gset_problem(130, seed=SEED, degree=5.0)
+    assert p.n == 130 and p.kind == "maxcut"
+    W = p.meta["W"]
+    rep = get_solver("fabric-jax", anneal_sweeps=0.5, inner_runs=4,
+                     outer_sweeps=2).solve(p, runs=2, seed=SEED)
+    sigma = rep.best_sigma[0]
+    cut = float(maxcut_value(W, sigma))
+    # verify: cut from spins == cut from energy, exactly (integer data)
+    assert cut == cut_from_energy(W, float(np.min(rep.energies[0])))
+
+
+def test_gset_problem_from_text_and_matrix():
+    W = random_gset(30, seed=1, degree=4.0)
+    p1 = gset_problem(W)
+    assert np.array_equal(p1.meta["W"], W)
+    assert np.array_equal(np.asarray(p1.J), -W.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# distributed/sharding edge cases the fabric relies on (satellite)
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_fit_spec_non_divisible_axes():
+    from repro.distributed.sharding import fit_spec
+    from jax.sharding import PartitionSpec as P
+    mesh = _FakeMesh({"fabric": 8})
+    # 1008 % 8 == 0 -> keep; 1009 -> drop to replicated
+    assert fit_spec(P(None, "fabric"), (4, 1008), mesh) == P(None, "fabric")
+    assert fit_spec(P(None, "fabric"), (4, 1009), mesh) == P(None, None)
+    # spec longer than the shape: the excess entries collapse to None
+    assert fit_spec(P("fabric", None, None), (16,), mesh) == \
+        P("fabric", None, None)
+    # tuple entry: product of both axis sizes must divide
+    mesh2 = _FakeMesh({"pod": 2, "data": 3})
+    assert fit_spec(P(("pod", "data"),), (12,), mesh2) == P(("pod", "data"))
+    assert fit_spec(P(("pod", "data"),), (8,), mesh2) == P(None)
+
+
+def test_batch_axes_and_data_size_mesh_shapes():
+    from repro.distributed.sharding import batch_axes, data_size, tp_size
+    # 1-device mesh: no batch-like axes, data_size collapses to 1
+    one = _FakeMesh({"model": 1})
+    assert batch_axes(one) == ()
+    assert data_size(one) == 1
+    assert tp_size(one) == 1
+    # multi-pod mesh: both batch axes multiply
+    pod = _FakeMesh({"pod": 2, "data": 4, "model": 8})
+    assert batch_axes(pod) == ("pod", "data")
+    assert data_size(pod) == 8
+    assert tp_size(pod) == 8
+    # data-only mesh (the fabric CI job's 8 host devices)
+    data = _FakeMesh({"data": 8})
+    assert batch_axes(data) == ("data",)
+    assert data_size(data) == 8
+    assert tp_size(data) == 1
+
+
+def test_rendezvous_route_single_member_and_determinism():
+    from repro.distributed.elastic import rendezvous_route
+    # single-member mesh: every key routes to the only member
+    assert rendezvous_route("anything", ["w0"]) == "w0"
+    with pytest.raises(ValueError):
+        rendezvous_route("key", [])
+    # order-independence (router replicas agree without coordination)
+    members = ["w0", "w1", "w2"]
+    assert rendezvous_route("k1", members) == \
+        rendezvous_route("k1", list(reversed(members)))
