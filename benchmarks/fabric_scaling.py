@@ -21,8 +21,11 @@ Four hard gates over the mesh-sharded checkerboard solver
 
 3. **Parity** — N <= 64 fabric-jax output is bit-identical to the plain
    engine solve, and large-N fabric output is bit-identical across mesh
-   sizes (K=1 vs K=8): the mesh decides where candidates are generated,
-   never what is accepted.
+   sizes: the mesh decides where candidates are generated, never what is
+   accepted. Two invariance rows: K=1 vs K=8 at N=252 (<= 1 tile per die
+   per color) AND K=1 vs K=2 at N=378, where a color class has MORE
+   tiles than dies — the case that catches any acceptance loop that
+   follows die-major batch order instead of canonical tile order.
 
 4. **chip-lns duel** — on a 2000-spin Gset instance (run end-to-end:
    Gset encode -> solve -> gauge decode -> cut verify), fabric-jax beats
@@ -119,19 +122,33 @@ def _phase_mesh(full: bool) -> dict:
               flush=True)
 
     # -- gate 3b: mesh-size bit-invariance at fixed N ---------------------
-    n_inv = 2 * SPINS_PER_DIE
-    p = gset_problem(n_inv, seed=SEED + 1, degree=6.0)
-    reps = {k: _solver(mesh_devices=k, outer_sweeps=2).solve(
-        p, runs=RESTARTS, seed=SEED) for k in (1, FORCED_DEVICES)}
-    a, b = reps[1], reps[FORCED_DEVICES]
-    if not (np.array_equal(a.energies[0], b.energies[0])
-            and np.array_equal(a.best_sigma[0], b.best_sigma[0])):
-        raise RuntimeError(
-            f"fabric output diverged between mesh sizes 1 and "
-            f"{FORCED_DEVICES} at N={n_inv} — acceptance must be "
-            f"mesh-independent")
-    out["mesh_invariance"] = {"n": n_inv, "mesh_devices": [1, FORCED_DEVICES],
-                              "bit_identical": True}
+    # Two rows: (a) N=252 over K=1 vs 8 — at most one tile per die per
+    # color, and (b) N=378 over K=1 vs 2 — SIX tiles, three per color
+    # class on two dies, so the die-major batch slot order differs from
+    # tile order. Row (b) is the configuration a die-major acceptance
+    # loop gets wrong (same-color tiles are still coupled through J, so
+    # acceptance ORDER shifts the field ledger): acceptance must run in
+    # canonical (problem, tile) order for this row to pass.
+    out["mesh_invariance"] = []
+    for n_inv, k_pair in ((2 * SPINS_PER_DIE, (1, FORCED_DEVICES)),
+                          (3 * SPINS_PER_DIE, (1, 2))):
+        p = gset_problem(n_inv, seed=SEED + 1, degree=6.0)
+        reps = {k: _solver(mesh_devices=k, outer_sweeps=2).solve(
+            p, runs=RESTARTS, seed=SEED) for k in k_pair}
+        a, b = reps[k_pair[0]], reps[k_pair[1]]
+        if not (np.array_equal(a.energies[0], b.energies[0])
+                and np.array_equal(a.best_sigma[0], b.best_sigma[0])):
+            raise RuntimeError(
+                f"fabric output diverged between mesh sizes {k_pair[0]} "
+                f"and {k_pair[1]} at N={n_inv} — acceptance must be "
+                f"mesh-independent (canonical tile order)")
+        tiles = a.meta["fabric"]["n_tiles"][0]
+        out["mesh_invariance"].append(
+            {"n": n_inv, "mesh_devices": list(k_pair), "n_tiles": tiles,
+             "tiles_per_color_exceeds_dies": tiles // 2 > k_pair[1],
+             "bit_identical": True})
+        print(f"# invariance N={n_inv} K={k_pair[0]} vs {k_pair[1]}: "
+              f"bit-identical ({tiles} tiles)", flush=True)
 
     # -- gates 2+4: the N=2000 end-to-end duel ----------------------------
     duel_sweeps = 4 if full else 2
@@ -275,15 +292,18 @@ def run(full: bool = False):
     record("fabric_scaling", payload)
     write_root_bench("BENCH_fabric.json", payload)
 
-    n_solves = len(mesh["weak"]) + 4
+    n_solves = len(mesh["weak"]) + 2 * len(mesh["mesh_invariance"]) + 4
     us = (time.time() - t0) * 1e6 / n_solves
     duel = mesh["duel"]
+    inv = ",".join(f"N{r['n']}:K{r['mesh_devices'][0]}-"
+                   f"{r['mesh_devices'][1]}"
+                   for r in mesh["mesh_invariance"])
     print(csv_line(
         "fabric_scaling", us,
         f"flatness=x{flatness:.2f};"
         f"duel_speedup=x{duel['speedup']:.1f};"
         f"duel_cut={duel['fabric']['best_cut']:.0f};"
-        f"parity=bit_identical;mesh_invariant=1-{FORCED_DEVICES}"))
+        f"parity=bit_identical;mesh_invariant={inv}"))
     return payload
 
 

@@ -35,9 +35,15 @@ CMOS Ising paper — BRIM et al., PAPERS.md — treats as the real question):
   sequentially per tile by EXACT float64 delta energy against the
   current state (an incrementally-maintained full-field ledger), so the
   per-restart incumbent is monotonically non-increasing — the same
-  acceptance contract as :class:`~repro.core.engine.BlockLNS`, which is
-  also why results are bit-identical across mesh sizes: the mesh decides
-  only WHERE candidates are generated, never what is accepted.
+  acceptance contract as :class:`~repro.core.engine.BlockLNS`. Crucially
+  the acceptance loop runs in CANONICAL ``(problem, tile)`` order, never
+  in the die-major slot order of the batch: same-color tiles share no
+  free spins but are still coupled through J, so each acceptance shifts
+  the field ledger seen by later tiles — iterating in mesh-dependent
+  order would make acceptance decisions (and thus results) depend on
+  ``n_dies``. With the canonical order the mesh decides only WHERE
+  candidates are generated, never what is accepted, and results are
+  bit-identical across mesh sizes.
 
 Dispatch ledger: ``colors x outer_sweeps`` engine dispatches per solve
 (the anneal bursts that occupy dies), plus ``problems x colors x
@@ -46,7 +52,6 @@ outer_sweeps`` field exchanges (the halo traffic), reported separately.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional, Sequence
 
@@ -178,9 +183,22 @@ class FieldExchange:
         self._fn = self._build(mesh)
         self.exchanges = 0
 
+    # jitted exchange fns keyed on (device ids, axis names) — meshes over
+    # the same devices compare equal in jax, so fresh Mesh objects from
+    # repeated solves reuse one compiled executable instead of pinning a
+    # new Mesh + shard_map executable per object for the process lifetime
+    _FN_CACHE: dict = {}
+
+    @classmethod
+    def _build(cls, mesh: Mesh):
+        key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+        fn = cls._FN_CACHE.get(key)
+        if fn is None:
+            fn = cls._FN_CACHE[key] = jax.jit(cls._make_exchange(mesh))
+        return fn
+
     @staticmethod
-    @functools.lru_cache(maxsize=None)
-    def _build(mesh: Mesh):
+    def _make_exchange(mesh: Mesh):
         def partial_fields(J_loc, s_loc):
             # J_loc (N_pad, N_pad/K) column tile, s_loc (R, N_pad/K):
             # this die's contribution to every row's field, then row-sum
@@ -188,10 +206,10 @@ class FieldExchange:
             h = jnp.einsum("rc,nc->rn", s_loc, J_loc)
             return jax.lax.psum(h, FABRIC_AXIS)
 
-        fn = shard_map(partial_fields, mesh,
-                       in_specs=(P(None, FABRIC_AXIS), P(None, FABRIC_AXIS)),
-                       out_specs=P(None, None))
-        return jax.jit(fn)
+        return shard_map(partial_fields, mesh,
+                         in_specs=(P(None, FABRIC_AXIS),
+                                   P(None, FABRIC_AXIS)),
+                         out_specs=P(None, None))
 
     def fields(self, s: np.ndarray) -> np.ndarray:
         """``h = s @ J`` for ±1 states ``s (R, N)`` -> ``(R, N)`` float32.
@@ -225,9 +243,10 @@ class FabricLNS:
     anneal concurrently across the mesh, per-sweep dispatches are
     ``n_colors`` (never one per block), and the boundary fields feeding
     the candidate anneals come from the sharded :class:`FieldExchange`
-    instead of host matmuls. Acceptance stays sequential and float64-
-    exact (per-restart incumbents are monotone), so the mesh size cannot
-    change the result — only where the work runs.
+    instead of host matmuls. Acceptance stays sequential, float64-exact,
+    and in canonical (problem, tile) order regardless of which die
+    generated each candidate (per-restart incumbents are monotone), so
+    the mesh size cannot change the result — only where the work runs.
 
     After ``solve``, ``self.ledger`` holds the occupancy/timing record
     the registry surfaces as ``meta['fabric']``.
@@ -288,7 +307,10 @@ class FabricLNS:
 
     def _template(self, color_plan, tiles, restarts):
         """(S, cb, cb) float32 batch with J_tile blocks stamped; rows are
-        (die-slot, restart)-major and idle-pad slots stay all-zero."""
+        (die-slot, restart)-major and idle-pad slots stay all-zero.
+        ``accept`` is the same spans re-sorted into canonical (problem,
+        tile) order — acceptance must NOT follow the die-major batch
+        order, which depends on n_dies (see module docstring)."""
         cb = self.chip_block
         S = len(color_plan["slots"]) * restarts
         batch = np.zeros((S, cb, cb), dtype=np.float32)
@@ -302,7 +324,9 @@ class FabricLNS:
             m = hi - lo
             batch[rows, 1:m + 1, 1:m + 1] = Jbb32
             spans.append((slot, rows))
-        return batch, spans
+        accept = sorted((sp for sp in spans if sp[0] is not None),
+                        key=lambda sp: sp[0])
+        return batch, spans, accept
 
     # -- the solve loop ----------------------------------------------------
     def solve(self, J_list, restarts: int, outer_sweeps: int, seed: int = 0):
@@ -340,7 +364,7 @@ class FabricLNS:
             for c, (cplan, tmpl) in enumerate(zip(colors, templates)):
                 if cplan is None:
                     continue
-                batch, spans = tmpl
+                batch, spans, accept = tmpl
 
                 # 1) halo exchange: sharded J_tile @ s row-sums (exact)
                 t0 = time.perf_counter()
@@ -378,14 +402,14 @@ class FabricLNS:
                 rec["t_engine"] += time.perf_counter() - t0
                 dispatches += 1
 
-                # 4) sequential EXACT acceptance (monotone incumbents)
+                # 4) sequential EXACT acceptance (monotone incumbents) in
+                # canonical (problem, tile) order — NOT die-major batch
+                # order, so results cannot depend on the mesh size
                 t0 = time.perf_counter()
                 best = e.argmin(axis=1)
                 cand_all = np.take_along_axis(
                     sig, best[:, None, None], axis=1)[:, 0]
-                for slot, rows in spans:
-                    if slot is None:
-                        continue
+                for slot, rows in accept:
                     p, t = slot
                     lo, hi, Jbb64, _, Jrows64 = tiles[slot]
                     m = hi - lo

@@ -8,7 +8,8 @@
         --workload maxcut --spins 128 --problems 1 --runs 16
 
     # 2000-spin Gset Max-Cut on the mesh-sharded mega-fabric (8 emulated
-    # dies; prints the per-color dispatch/occupancy ledger)
+    # dies; prints the per-color dispatch/occupancy ledger; gset graph
+    # sparsity is set by --degree, default 6 — not --density)
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.solve --solver fabric-jax \
         --workload gset --spins 2000 --problems 1 --runs 4 \
@@ -50,12 +51,15 @@ _BUILTIN = ("random-qubo", "maxcut", "gset")
 
 
 def build_suite(workload: str, n: int, density: float, problems: int,
-                seed: int) -> ProblemSuite:
+                seed: int, degree: float | None = None) -> ProblemSuite:
     """One suite for any workload name: built-ins keep the paper's problem
     families; everything else resolves through the ``repro.workloads``
     registry (``n`` is the native size — nodes / variables / cities).
     ``--density`` reaches every generator that takes one (the graph
-    workloads); 3sat/tsp have their own shape knobs and ignore it."""
+    workloads); 3sat/tsp have their own shape knobs and ignore it. The
+    ``gset`` family is parameterized by expected vertex ``degree``
+    instead (G1-class graphs are ~degree-6 at every N, not a fixed edge
+    fraction) — ``--density`` does not apply to it."""
     import inspect
 
     from ..api import Problem
@@ -65,12 +69,9 @@ def build_suite(workload: str, n: int, density: float, problems: int,
         return ProblemSuite([Problem.maxcut(n, density, seed=seed + i)
                              for i in range(problems)])
     if workload == "gset":
-        # Gset-style sparse Max-Cut at fabric scale: --density is the
-        # expected vertex degree here (G1-class graphs are ~degree-6 at
-        # every N, not a fixed edge fraction)
         from ..problems.gset import gset_problem
-        degree = density if density > 1 else 6.0
-        return ProblemSuite([gset_problem(n, seed=seed + i, degree=degree)
+        deg = 6.0 if degree is None else float(degree)
+        return ProblemSuite([gset_problem(n, seed=seed + i, degree=deg)
                              for i in range(problems)])
     from ..workloads import get_workload
     gen = get_workload(workload).random_instance
@@ -86,12 +87,14 @@ def solve(n_spins: int, density: float, problems: int, runs: int,
           budget: float | None = None, use_cache: bool = True,
           workload: str = "random-qubo", chips: int = 1,
           mismatch_sigma: float = 0.0, tau_leak_spread: float = 0.0,
-          mesh_devices: int | None = None, oracle: bool = True):
+          mesh_devices: int | None = None, oracle: bool = True,
+          degree: float | None = None):
     """Solve one workload cell through the registry; returns
     ``(report, suite)`` — the oracle-attached
     :class:`repro.api.SolveReport` plus the suite it solved (callers need
     the problems to decode zoo solutions back to native form)."""
-    suite = build_suite(workload, n_spins, density, problems, seed)
+    suite = build_suite(workload, n_spins, density, problems, seed,
+                        degree=degree)
     opts = {}
     if solver == "engine":
         opts = dict(backend=backend, autotune=autotune,
@@ -135,7 +138,14 @@ def main():
     ap.add_argument("--spins", type=int, default=64,
                     help="native size: spins for random-qubo/maxcut, "
                          "nodes/variables/cities for zoo workloads")
-    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--density", type=float, default=0.5,
+                    help="edge/coupling density for random-qubo, maxcut "
+                         "and density-taking zoo workloads (not gset — "
+                         "see --degree)")
+    ap.add_argument("--degree", type=float, default=None,
+                    help="[gset] expected vertex degree of the sparse "
+                         "Max-Cut graph (default 6.0, the G1-class "
+                         "regime); gset ignores --density")
     ap.add_argument("--problems", type=int, default=4)
     ap.add_argument("--runs", type=int, default=256)
     ap.add_argument("--budget", type=float, default=None,
@@ -193,7 +203,8 @@ def main():
         workload=args.workload, chips=args.chips,
         mismatch_sigma=args.mismatch_sigma,
         tau_leak_spread=args.tau_leak_spread,
-        mesh_devices=args.mesh_devices, oracle=not args.no_oracle)
+        mesh_devices=args.mesh_devices, oracle=not args.no_oracle,
+        degree=args.degree)
     plan = report.meta.get("engine_plan")
     if plan:
         print(f"[engine] path={plan['path']} block_r={plan['block_r']} "
